@@ -1,0 +1,27 @@
+"""Paper Fig. 13: All-to-All on the heterogeneous 2D switch topology
+(8-NPU nodes with fast local switches joined by a slower spine), PCCL vs the
+Direct baseline. Paper reports 1.33x mean speedup."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import direct_all_to_all, synthesize_all_to_all
+from repro.topology import two_level_switch
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    node_counts = [2, 4] + ([8, 16, 32] if full else [])
+    for nodes in node_counts:
+        topo = two_level_switch(nodes, npus_per_node=8)
+        n = nodes * 8
+        group = list(range(n))
+        alg, us = timed(synthesize_all_to_all, topo, group, bytes=128.0)
+        alg.validate()
+        direct = direct_all_to_all(topo, group, bytes=128.0)
+        speedup = direct.makespan / alg.makespan if alg.makespan else 0.0
+        rows.append(Row(
+            f"fig13_switch2d_{n}npu", us,
+            f"npus={n};pccl_t={alg.makespan:.1f};direct_t={direct.makespan:.1f};"
+            f"speedup={speedup:.2f}"))
+    return rows

@@ -1,0 +1,155 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_link_bw_per_chip
+
+(post-SPMD HLO shapes are per-device, so no further division by chip count —
+verified empirically in launch/dryrun.py development.) FLOPs/bytes come from
+the loop-aware hierarchical analyzer (launch/hlo_cost.py); XLA's flat
+cost_analysis undercounts scan-over-layers bodies by their trip count.
+
+MODEL_FLOPS uses the standard analytic estimate over the step's tokens:
+train: 6*N*D, prefill: 2*N*D, decode: 2*N*B tokens (N = active params for
+MoE). The MODEL/HLO ratio surfaces remat/padding/masking overheads.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+from repro.configs import REGISTRY, SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # TPU v5e bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-chip budget used by the assignment)
+
+MESH_CHIPS = {"pod": 256, "multipod": 512}
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """HBM-traffic floor per device per step, assuming TPU-grade fusion and
+    VMEM-resident attention tiles (which the Pallas kernels provide; the
+    CPU-targeted HLO byte count is an upper bound that includes tile traffic
+    a TPU keeps on-chip).
+
+    train:   3 passes over activations (fwd, bwd, remat) + params read +
+             grads written + AdamW state read/write (16 B/param f32)
+    prefill: 1 activation pass + params read
+    decode:  params read + KV/SSM state read per token (+ write)
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count()
+    p_bytes = 4.0 * n  # fp32 master params
+    tokens_local = shape.global_batch * shape.seq_len / chips
+    # ~8 activation tensors of width d per layer touched per token
+    layer_traffic = 8 * 2.0 * cfg.d_model  # bf16
+    depth = cfg.num_layers + (cfg.encoder_layers or 0)
+    act = tokens_local * layer_traffic * depth
+    if shape.kind == "train":
+        return 3.0 * act + (p_bytes + 4.0 * n + 16.0 * n) / chips
+    if shape.kind == "prefill":
+        return act + p_bytes / chips
+    # decode: one token per sequence; reads whole param shard + cache shard
+    cache = (2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * 2.0 *
+             cfg.num_layers * shape.global_batch / chips)
+    if cfg.family == "ssm":
+        cache = (cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0 *
+                 cfg.num_layers * shape.global_batch / chips)
+    return p_bytes / chips + 2.0 * cache
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def analyze_cell(key: str, rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name, mesh_name = key.split("|")
+    chips = MESH_CHIPS[mesh_name]
+    flops = rec["flops"]
+    nbytes = rec["bytes_accessed"]
+    coll = sum(rec.get("collective_bytes", {}).values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory_hlo = nbytes / HBM_BW  # upper bound (CPU-fusion granularity)
+    t_memory = analytic_memory_bytes(arch, shape_name, chips) / HBM_BW
+    t_collective = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops_per_device(arch, shape_name, chips)
+    ratio = mf / flops if flops else 0.0
+    # roofline fraction: useful compute time / dominant-term time
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "key": key, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_hlo_upper_s": t_memory_hlo,
+        "t_collective_s": t_collective, "dominant": dominant,
+        "model_flops_per_dev": mf, "hlo_flops_per_dev": flops,
+        "model_over_hlo": ratio, "roofline_fraction": frac,
+        "collective_bytes": rec.get("collective_bytes", {}),
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "fits_hbm": (rec["memory"]["temp_bytes"]
+                     + rec["memory"]["argument_bytes"]) < 16 * 2**30,
+    }
+
+
+def improvement_hint(cell: dict) -> str:
+    d = cell["dominant"]
+    if d == "compute":
+        if cell["model_over_hlo"] < 0.5:
+            return ("compute-bound with low useful-FLOP ratio: cut remat/"
+                    "masked-tile waste (Pallas causal tile skipping)")
+        return "compute-bound near useful FLOPs: scale batch or accept"
+    if d == "memory":
+        return ("memory-bound: fuse elementwise chains, bf16 residuals, "
+                "larger tiles to raise arithmetic intensity")
+    return ("collective-bound: overlap collectives with compute, shrink "
+            "gradient payload (compression), or reshard to cheaper axes")
+
+
+def run(full: bool = False, path: str = "results/dryrun.json") -> list[Row]:
+    if not os.path.exists(path):
+        return [Row("roofline_missing_dryrun", 0.0,
+                    f"run `python -m repro.launch.dryrun --out {path}` first")]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    cells = []
+    for key in sorted(results):
+        cell = analyze_cell(key, results[key])
+        if cell is None:
+            continue
+        cells.append(cell)
+        rows.append(Row(
+            "roofline_" + key.replace("|", "_"), 0.0,
+            f"compute_s={cell['t_compute_s']:.4g};"
+            f"memory_s={cell['t_memory_s']:.4g};"
+            f"collective_s={cell['t_collective_s']:.4g};"
+            f"dominant={cell['dominant']};"
+            f"model/hlo={cell['model_over_hlo']:.3f};"
+            f"roofline_frac={cell['roofline_fraction']:.3f};"
+            f"fits_hbm={cell['fits_hbm']};"
+            f"hint={improvement_hint(cell)}"))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(cells, f, indent=1)
+    return rows

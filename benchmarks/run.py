@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick set
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+    PYTHONPATH=src python -m benchmarks.run --only fig16
+
+Prints ``name,us_per_call,derived`` CSV. `us_per_call` is synthesis wall time
+where the benchmark synthesizes; derived carries the figure's metric
+(speedups, makespans, roofline terms, ...).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow: up to 16x16 meshes)")
+    ap.add_argument("--only", default=None, help="substring filter on module")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        alltoall_bw,
+        hetero_switch,
+        pg_sensitivity,
+        process_group,
+        roofline,
+        synthesis_chunks,
+        synthesis_scale,
+        utilization,
+    )
+
+    modules = [
+        ("fig11", synthesis_scale),
+        ("fig12", synthesis_chunks),
+        ("fig13", hetero_switch),
+        ("fig14", alltoall_bw),
+        ("fig16", process_group),
+        ("fig18", utilization),
+        ("fig19", pg_sensitivity),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for tag, mod in modules:
+        if args.only and args.only not in tag and args.only not in mod.__name__:
+            continue
+        try:
+            for row in mod.run(full=args.full):
+                print(row.csv())
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{tag}_FAILED,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun.json (run after `python -m repro.launch.dryrun` and
+`python -m benchmarks.run --only roofline`)."""
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import (  # noqa: E402
+    MESH_CHIPS,
+    analyze_cell,
+    improvement_hint,
+)
+
+
+def main():
+    with open("results/dryrun.json") as f:
+        results = json.load(f)
+
+    print("### Dry-run table (per-device numbers from compiled HLO)\n")
+    print("| arch | shape | mesh | status | compile s | temp GiB | "
+          "args GiB | HLO GFLOPs/dev | collective GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(results):
+        r = results[key]
+        arch, shape, mesh = key.split("|")
+        if r["status"] == "skipped":
+            print(f"| {arch} | {shape} | {mesh} | skipped "
+                  f"({r['reason'][:40]}...) | | | | | |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | {mesh} | ERROR | | | | | |")
+            continue
+        coll = sum(r.get("collective_bytes", {}).values()) / 2**30
+        print(f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} | "
+              f"{r['memory']['temp_bytes']/2**30:.2f} | "
+              f"{r['memory']['argument_bytes']/2**30:.2f} | "
+              f"{r['flops']/1e9:.3g} | {coll:.1f} |")
+
+    print("\n### Roofline table (TPU v5e: 197 TF/s bf16, 819 GB/s HBM, "
+          "50 GB/s/link ICI)\n")
+    print("| cell | compute s | memory s (analytic) | collective s | "
+          "dominant | MODEL/HLO flops | roofline frac | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(results):
+        cell = analyze_cell(key, results[key])
+        if cell is None:
+            continue
+        print(f"| {key} | {cell['t_compute_s']:.3g} | "
+              f"{cell['t_memory_s']:.3g} | {cell['t_collective_s']:.3g} | "
+              f"{cell['dominant']} | {cell['model_over_hlo']:.3f} | "
+              f"{cell['roofline_fraction']:.3f} | "
+              f"{improvement_hint(cell)[:60]} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+from repro.comms.executor import BufferPlan, execute_program, plan_buffers
+from repro.comms.primitives import (
+    CollectiveSpec,
+    pccl_all_gather,
+    pccl_all_reduce,
+    pccl_all_to_all,
+    pccl_reduce_scatter,
+    synthesize_program,
+)
+from repro.comms.compression import (
+    ef_int8_compress,
+    ef_int8_decompress,
+    error_feedback_all_reduce,
+    topk_compress,
+    topk_decompress,
+)
+
+__all__ = [
+    "BufferPlan",
+    "execute_program",
+    "plan_buffers",
+    "CollectiveSpec",
+    "pccl_all_gather",
+    "pccl_all_reduce",
+    "pccl_all_to_all",
+    "pccl_reduce_scatter",
+    "synthesize_program",
+    "ef_int8_compress",
+    "ef_int8_decompress",
+    "error_feedback_all_reduce",
+    "topk_compress",
+    "topk_decompress",
+]

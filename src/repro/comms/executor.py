@@ -1,0 +1,130 @@
+"""Execute PCCL-synthesized schedules as shard_map ppermute programs.
+
+This is the TPU adaptation of the paper's §4.8 (MSCCL translation): each
+synthesis wave becomes one `jax.lax.ppermute` over the device mesh. Because
+the synthesizer emits congestion-free neighbor-link transfers, the resulting
+permutes are ICI-neighbor permutes on the physical torus.
+
+Buffers are functional: every device holds a [num_slots, chunk_elems] array.
+A static *buffer plan* assigns, per device, a slot to every chunk the device
+ever holds (source, in-transit forwarder — possibly outside the process
+group, which is how PG-awareness executes — or destination). Slot lookups
+inside the traced program use per-device constant tables indexed by
+`lax.axis_index`, so one SPMD program serves every device.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.translate import PpermuteProgram, Send
+
+
+@dataclass
+class RoundTables:
+    perm: list[tuple[int, int]]
+    send_slot: np.ndarray  # [num_devices] slot each device sends (0 if none)
+    recv_slot: np.ndarray  # [num_devices] slot each device writes (trash if none)
+    is_recv: np.ndarray  # [num_devices] bool
+    is_reduce: np.ndarray  # [num_devices] bool (receive-reduce vs receive-copy)
+
+
+@dataclass
+class BufferPlan:
+    num_devices: int
+    num_slots: int  # data slots; slot num_slots is the trash slot
+    slot_of: dict[tuple[int, int], int]  # (device, chunk) -> slot
+    rounds: list[RoundTables] = field(default_factory=list)
+
+    @property
+    def buffer_slots(self) -> int:
+        return self.num_slots + 1  # + trash
+
+
+def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
+    n = prog.num_devices
+    slot_of: dict[tuple[int, int], int] = {}
+    next_slot = [0] * n
+
+    def ensure_slot(device: int, chunk: int) -> int:
+        key = (device, chunk)
+        if key not in slot_of:
+            slot_of[key] = next_slot[device]
+            next_slot[device] += 1
+        return slot_of[key]
+
+    # initial holders (sources; every contributor for reduced chunks)
+    for chunk, holders in prog.chunk_holders.items():
+        for h in holders:
+            ensure_slot(h, chunk)
+
+    rounds: list[RoundTables] = []
+    for sends in prog.rounds:
+        perm = []
+        send_slot = np.zeros(n, dtype=np.int32)
+        recv_slot = np.zeros(n, dtype=np.int32)
+        is_recv = np.zeros(n, dtype=bool)
+        is_reduce = np.zeros(n, dtype=bool)
+        for s in sends:
+            if (s.src, s.chunk) not in slot_of:
+                raise AssertionError(
+                    f"send of chunk {s.chunk} from device {s.src} before arrival"
+                )
+            perm.append((s.src, s.dst))
+            send_slot[s.src] = slot_of[(s.src, s.chunk)]
+            recv_slot[s.dst] = ensure_slot(s.dst, s.chunk)
+            is_recv[s.dst] = True
+            is_reduce[s.dst] = s.reduce
+        rounds.append(RoundTables(perm, send_slot, recv_slot, is_recv, is_reduce))
+
+    num_slots = max(next_slot) if n else 0
+    plan = BufferPlan(n, num_slots, slot_of, rounds)
+    # route non-receivers' ppermute zeros into the trash slot
+    for rt in plan.rounds:
+        rt.recv_slot = np.where(rt.is_recv, rt.recv_slot, num_slots).astype(np.int32)
+    return plan
+
+
+def execute_program(
+    plan: BufferPlan,
+    buf: jax.Array,
+    axis_name,
+) -> jax.Array:
+    """Run inside shard_map. `buf`: [plan.buffer_slots, *chunk_shape] local
+    buffer with source chunks pre-placed at their planned slots. Returns the
+    final buffer; callers extract destination slots via `plan.slot_of`."""
+    idx = lax.axis_index(axis_name)
+    for rt in plan.rounds:
+        send_slot = jnp.asarray(rt.send_slot)[idx]
+        recv_slot = jnp.asarray(rt.recv_slot)[idx]
+        reduce_here = jnp.asarray(rt.is_reduce)[idx]
+        val = lax.dynamic_index_in_dim(buf, send_slot, axis=0, keepdims=False)
+        got = lax.ppermute(val, axis_name, rt.perm)
+        old = lax.dynamic_index_in_dim(buf, recv_slot, axis=0, keepdims=False)
+        new = jnp.where(reduce_here, old + got, got)
+        buf = lax.dynamic_update_index_in_dim(buf, new, recv_slot, axis=0)
+    return buf
+
+
+def gather_slots(
+    plan: BufferPlan, buf: jax.Array, axis_name, chunks: list[int]
+) -> jax.Array:
+    """Extract `chunks` (in order) from the local buffer; per-device slot
+    tables again via axis_index. Missing chunks map to the trash slot."""
+    idx = lax.axis_index(axis_name)
+    tables = []
+    for chunk in chunks:
+        t = np.full(plan.num_devices, plan.num_slots, dtype=np.int32)
+        for dev in range(plan.num_devices):
+            got = plan.slot_of.get((dev, chunk))
+            if got is not None:
+                t[dev] = got
+        tables.append(jnp.asarray(t)[idx])
+    slots = jnp.stack(tables)
+    return jnp.take(buf, slots, axis=0)

@@ -1,0 +1,249 @@
+"""PCCL-backed collective primitives for JAX programs.
+
+Drop-in collectives that run a PCCL-synthesized, topology-aware schedule via
+ppermute instead of XLA's built-in all-gather/all-reduce/all-to-all. They are
+meant to be called INSIDE shard_map over the axis (or flattened axes) whose
+devices form the process group.
+
+The schedule is synthesized once per (topology, group, collective, nbytes)
+and cached; synthesis happens at trace time on the host, so the compiled
+program embeds the static permute rounds.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comms.executor import BufferPlan, execute_program, gather_slots, plan_buffers
+from repro.core import synthesizer as syn
+from repro.core.conditions import ChunkIds
+from repro.core.translate import PpermuteProgram, to_ppermute_program
+from repro.topology.topology import Topology
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    """What to synthesize: collective kind over a device group embedded in a
+    physical topology. `device_of_npu` maps topology NPU ids to mesh axis
+    indices; it must cover every NPU that may forward traffic (the whole
+    topology for process-group-aware routing)."""
+
+    kind: str  # all_gather | reduce_scatter | all_reduce | all_to_all
+    group: tuple[int, ...]  # NPU ids of the process group, in axis order
+
+
+_PROGRAM_CACHE: dict = {}
+
+
+def synthesize_program(
+    topo: Topology,
+    spec: CollectiveSpec,
+    *,
+    nbytes: float = 1.0,
+    device_of_npu: dict[int, int] | None = None,
+    pipelined_ar: bool = True,
+) -> tuple[PpermuteProgram, BufferPlan]:
+    key = (topo.name, topo.num_links, spec, nbytes, pipelined_ar,
+           None if device_of_npu is None else tuple(sorted(device_of_npu.items())))
+    hit = _PROGRAM_CACHE.get(key)
+    if hit is not None:
+        return hit
+    group = list(spec.group)
+    if spec.kind == "all_gather":
+        alg = syn.synthesize_all_gather(topo, group, bytes=nbytes)
+    elif spec.kind == "all_to_all":
+        alg = syn.synthesize_all_to_all(topo, group, bytes=nbytes)
+    elif spec.kind == "reduce_scatter":
+        alg = syn.synthesize_reduce_scatter(topo, group, bytes=nbytes)
+    elif spec.kind == "all_reduce":
+        alg = syn.synthesize_all_reduce(topo, group, bytes=nbytes,
+                                        pipelined=pipelined_ar)
+    else:
+        raise ValueError(f"unknown collective kind {spec.kind!r}")
+    alg.validate()
+    prog = to_ppermute_program(alg, device_of_npu)
+    plan = plan_buffers(prog)
+    _PROGRAM_CACHE[key] = (prog, plan)
+    return prog, plan
+
+
+def _group_devices(prog: PpermuteProgram, spec: CollectiveSpec,
+                   device_of_npu: dict[int, int] | None) -> list[int]:
+    if device_of_npu is None:
+        return list(spec.group)
+    return [device_of_npu[n] for n in spec.group]
+
+
+def _chunks_by_src(prog: PpermuteProgram, devices: list[int]) -> dict[int, list[int]]:
+    out: dict[int, list[int]] = {d: [] for d in devices}
+    for chunk, src in sorted(prog.chunk_srcs.items()):
+        if src in out:
+            out[src].append(chunk)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collectives (call inside shard_map)
+# ---------------------------------------------------------------------------
+
+def pccl_all_gather(
+    x: jax.Array,
+    axis_name,
+    topo: Topology,
+    spec: CollectiveSpec,
+    *,
+    device_of_npu: dict[int, int] | None = None,
+    tiled: bool = False,
+) -> jax.Array:
+    """All-gather x (local shard, shape S) over the group -> [g, *S] stacked
+    in group order (or concatenated on axis 0 when tiled=True)."""
+    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
+    devices = _group_devices(prog, spec, device_of_npu)
+    by_src = _chunks_by_src(prog, devices)
+    # one chunk per group member
+    my_chunk_slot = np.zeros(prog.num_devices, dtype=np.int32)
+    for dev in devices:
+        (chunk,) = by_src[dev]
+        my_chunk_slot[dev] = plan.slot_of[(dev, chunk)]
+    idx = lax.axis_index(axis_name)
+    buf = jnp.zeros((plan.buffer_slots, *x.shape), x.dtype)
+    buf = lax.dynamic_update_index_in_dim(
+        buf, x, jnp.asarray(my_chunk_slot)[idx], axis=0
+    )
+    buf = execute_program(plan, buf, axis_name)
+    ordered_chunks = [by_src[d][0] for d in devices]
+    out = gather_slots(plan, buf, axis_name, ordered_chunks)
+    return jnp.concatenate(list(out), axis=0) if tiled else out
+
+
+def pccl_reduce_scatter(
+    x: jax.Array,
+    axis_name,
+    topo: Topology,
+    spec: CollectiveSpec,
+    *,
+    device_of_npu: dict[int, int] | None = None,
+) -> jax.Array:
+    """x: [g, *S] (addend g for each group member); returns this device's
+    reduced shard [*S] (devices outside the group return zeros)."""
+    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
+    devices = _group_devices(prog, spec, device_of_npu)
+    # chunk k is owned by group member k (condition order = group order)
+    chunks = sorted(prog.chunk_holders)  # ReduceCondition: dests are owners
+    owner_of_chunk = {c: prog.chunk_dests[c][0] for c in chunks}
+    # initial buffer: device d's contribution to chunk k sits at d's slot for k
+    # — but the reversed-AG plan only allocates slots along reduction paths.
+    # Every group member is a leaf (or interior) of every chunk's tree, so the
+    # slot exists for group devices.
+    init_slot = np.full((prog.num_devices, len(chunks)), plan.num_slots, np.int32)
+    for ci, c in enumerate(chunks):
+        for dev in devices:
+            got = plan.slot_of.get((dev, c))
+            if got is not None:
+                init_slot[dev, ci] = got
+    idx = lax.axis_index(axis_name)
+    buf = jnp.zeros((plan.buffer_slots, *x.shape[1:]), x.dtype)
+    for ci in range(len(chunks)):
+        buf = lax.dynamic_update_index_in_dim(
+            buf, x[ci], jnp.asarray(init_slot[:, ci])[idx], axis=0
+        )
+    buf = execute_program(plan, buf, axis_name)
+    # each group device extracts its own chunk
+    my_chunk_table = np.zeros(prog.num_devices, dtype=np.int64)
+    for ci, c in enumerate(chunks):
+        my_chunk_table[owner_of_chunk[c]] = c
+    out_slot = np.full(prog.num_devices, plan.num_slots, np.int32)
+    for dev in devices:
+        out_slot[dev] = plan.slot_of[(dev, int(my_chunk_table[dev]))]
+    return lax.dynamic_index_in_dim(
+        buf, jnp.asarray(out_slot)[idx], axis=0, keepdims=False
+    )
+
+
+def pccl_all_reduce(
+    x: jax.Array,
+    axis_name,
+    topo: Topology,
+    spec: CollectiveSpec,
+    *,
+    device_of_npu: dict[int, int] | None = None,
+) -> jax.Array:
+    """All-reduce x (same shape everywhere) over the group. x is split into
+    g shard-chunks along axis 0 (must divide); composition RS∘AG per §4.5."""
+    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
+    devices = _group_devices(prog, spec, device_of_npu)
+    g = len(devices)
+    chunks = sorted(prog.chunk_holders)
+    assert len(chunks) == g, "all_reduce uses one shard-chunk per member"
+    # chunk order follows group order by construction (see
+    # synthesizer.synthesize_all_reduce: reduce_scatter iterates the group)
+    xs = jnp.reshape(x, (g, x.shape[0] // g, *x.shape[1:]))
+    init_slot = np.full((prog.num_devices, g), plan.num_slots, np.int32)
+    for ci, c in enumerate(chunks):
+        for dev in devices:
+            got = plan.slot_of.get((dev, c))
+            if got is not None:
+                init_slot[dev, ci] = got
+    idx = lax.axis_index(axis_name)
+    buf = jnp.zeros((plan.buffer_slots, *xs.shape[1:]), x.dtype)
+    for ci in range(g):
+        buf = lax.dynamic_update_index_in_dim(
+            buf, xs[ci], jnp.asarray(init_slot[:, ci])[idx], axis=0
+        )
+    buf = execute_program(plan, buf, axis_name)
+    out = gather_slots(plan, buf, axis_name, chunks)
+    return jnp.reshape(out, x.shape)
+
+
+def pccl_all_to_all(
+    x: jax.Array,
+    axis_name,
+    topo: Topology,
+    spec: CollectiveSpec,
+    *,
+    device_of_npu: dict[int, int] | None = None,
+) -> jax.Array:
+    """x: [g, *S] where row j is this device's payload for group member j.
+    Returns [g, *S] where row i is the payload received from member i
+    (row for self = own self-payload, which never leaves the device)."""
+    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
+    devices = _group_devices(prog, spec, device_of_npu)
+    g = len(devices)
+    rank_of_device = {d: r for r, d in enumerate(devices)}
+    # chunk (i -> j): src devices[i], dest devices[j]; build per-device tables
+    send_chunk_slot = np.full((prog.num_devices, g), plan.num_slots, np.int32)
+    recv_chunk_slot = np.full((prog.num_devices, g), plan.num_slots, np.int32)
+    self_row = np.zeros(prog.num_devices, dtype=np.int32)
+    for chunk, src in prog.chunk_srcs.items():
+        dst = prog.chunk_dests[chunk][0]
+        i, j = rank_of_device[src], rank_of_device[dst]
+        send_chunk_slot[src, j] = plan.slot_of[(src, chunk)]
+        recv_chunk_slot[dst, i] = plan.slot_of[(dst, chunk)]
+    for dev in devices:
+        self_row[dev] = rank_of_device[dev]
+    idx = lax.axis_index(axis_name)
+    buf = jnp.zeros((plan.buffer_slots, *x.shape[1:]), x.dtype)
+    for j in range(g):
+        buf = lax.dynamic_update_index_in_dim(
+            buf, x[j], jnp.asarray(send_chunk_slot[:, j])[idx], axis=0
+        )
+    buf = execute_program(plan, buf, axis_name)
+    rows = []
+    for i in range(g):
+        rows.append(
+            lax.dynamic_index_in_dim(
+                buf, jnp.asarray(recv_chunk_slot[:, i])[idx], axis=0, keepdims=False
+            )
+        )
+    out = jnp.stack(rows)
+    # self row: take from input (never transferred)
+    me = jnp.asarray(self_row)[idx]
+    self_payload = lax.dynamic_index_in_dim(x, me, axis=0, keepdims=False)
+    return lax.dynamic_update_index_in_dim(out, self_payload, me, axis=0)

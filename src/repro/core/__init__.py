@@ -1,0 +1,85 @@
+"""PCCL core: process group-aware collective algorithm synthesis (the paper's
+contribution), plus the validation oracle, baselines, and the alpha-beta
+simulator used for evaluation."""
+
+from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import (
+    ChunkIds,
+    Condition,
+    ReduceCondition,
+    all_gather,
+    all_reduce,
+    all_to_all,
+    all_to_allv,
+    broadcast,
+    gather,
+    multicast,
+    point_to_point,
+    reduce,
+    reduce_scatter,
+    scatter,
+)
+from repro.core.synthesizer import (
+    order_conditions,
+    synthesize,
+    synthesize_all_gather,
+    synthesize_all_reduce,
+    synthesize_all_to_all,
+    synthesize_joint,
+    synthesize_reduce,
+    synthesize_reduce_scatter,
+)
+from repro.core.simulator import (
+    Flow,
+    SimResult,
+    collective_bandwidth,
+    replay_algorithm,
+    simulate_flows,
+)
+from repro.core.baselines import (
+    direct_all_gather,
+    direct_all_to_all,
+    ring_all_gather,
+    shortest_path_links,
+)
+from repro.core.translate import PpermuteProgram, Send, to_msccl_json, to_ppermute_program
+
+__all__ = [
+    "CollectiveAlgorithm",
+    "Transfer",
+    "ChunkIds",
+    "Condition",
+    "ReduceCondition",
+    "all_gather",
+    "all_reduce",
+    "all_to_all",
+    "all_to_allv",
+    "broadcast",
+    "gather",
+    "multicast",
+    "point_to_point",
+    "reduce",
+    "reduce_scatter",
+    "scatter",
+    "order_conditions",
+    "synthesize",
+    "synthesize_all_gather",
+    "synthesize_all_reduce",
+    "synthesize_all_to_all",
+    "synthesize_joint",
+    "synthesize_reduce",
+    "synthesize_reduce_scatter",
+    "Flow",
+    "SimResult",
+    "collective_bandwidth",
+    "replay_algorithm",
+    "simulate_flows",
+    "direct_all_gather",
+    "direct_all_to_all",
+    "ring_all_gather",
+    "shortest_path_links",
+    "PpermuteProgram",
+    "Send",
+    "to_msccl_json",
+    "to_ppermute_program",
+]

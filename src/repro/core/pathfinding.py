@@ -1,0 +1,244 @@
+"""BFS pathfinding over the TEN (paper §4.3, Algorithm 2).
+
+Given one condition (chunk, src, dests), find timed store-and-forward paths
+from src to every destination, over links not yet occupied by previously
+scheduled chunks. Two modes:
+
+* ``bfs_int``: the paper's homogeneous, synchronous TEN — discrete unit
+  timesteps, frontier expansion per timestep, exactly Algorithm 2 + Fig. 6.
+* ``bfs_cont``: the heterogeneous generalization (paper §4.6) — earliest-
+  arrival search where each link candidate carries its alpha-beta transfer
+  time and links have busy *intervals*; with all-equal link times it visits
+  nodes in the same order as ``bfs_int``.
+
+Both return the *pruned* transfer set: the BFS may visit more nodes than
+requested (paper Fig. 6d), and only edges on some src->dest path are retained
+(Fig. 6e) — including through out-of-process-group NPUs, which is where the
+paper's process-group awareness comes from.
+
+Switch handling (paper §4.7): visiting a full switch is skipped until its
+buffer drains; non-multicast switches serialize their egress (one next
+neighbor per step, "visits next nodes one by one").
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+from repro.core.algorithm import Transfer
+from repro.core.conditions import Condition
+from repro.core.ten import TEN
+
+_EPS = 1e-9
+
+
+@dataclass
+class PathResult:
+    """Pruned transfers + chunk arrival time at every retained node."""
+
+    transfers: list[Transfer]
+    arrivals: dict[int, float]  # node -> arrival time (retained nodes only)
+    reached: dict[int, float]  # dest -> arrival time
+
+
+def _prune(
+    chunk: int,
+    src: int,
+    dests: frozenset[int],
+    pred: dict[int, tuple[int, int, float, float]],
+    visited: dict[int, float],
+) -> PathResult:
+    """Keep only edges on some src->dest path (paper Fig. 6e)."""
+    keep: dict[tuple[int, float], Transfer] = {}
+    arrivals: dict[int, float] = {src: visited[src]}
+    reached: dict[int, float] = {}
+    for dest in dests:
+        if dest == src:
+            reached[dest] = visited[src]
+            continue
+        if dest not in visited:
+            raise AssertionError(f"chunk {chunk}: BFS did not reach dest {dest}")
+        reached[dest] = visited[dest]
+        node = dest
+        while node != src:
+            u, link, s, e = pred[node]
+            key = (link, s)
+            if key not in keep:
+                keep[key] = Transfer(chunk, link, u, node, s, e)
+            arrivals[node] = e
+            node = u
+    transfers = sorted(keep.values(), key=lambda t: (t.start, t.link))
+    return PathResult(transfers, arrivals, reached)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous synchronous BFS (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def bfs_int(ten: TEN, cond: Condition, max_steps: int | None = None) -> PathResult:
+    topo = ten.topology
+    src = cond.src
+    dests = cond.remote_dests
+    if not dests:
+        return PathResult([], {src: cond.release}, {src: cond.release})
+
+    t = int(cond.release)
+    visited: dict[int, float] = {src: float(t)}
+    pred: dict[int, tuple[int, int, float, float]] = {}
+    active: list[int] = [src]
+    remaining = set(dests)
+    if max_steps is None:
+        # Links become free after the committed horizon, so any connected
+        # destination is reachable within horizon + |V| steps.
+        max_steps = int(ten.horizon()) + topo.num_nodes + int(cond.release) + 4
+
+    while remaining:
+        if t > max_steps:
+            raise AssertionError(
+                f"chunk {cond.chunk}: unreachable dests {sorted(remaining)}"
+            )
+        next_active: list[int] = []
+        newly: list[int] = []
+        for u in active:
+            node_u = topo.nodes[u]
+            is_sw = ten.topology.is_switch(u)
+            budget = 1 if (is_sw and not node_u.multicast) else None
+            sent = 0
+            has_unvisited = False
+            for link in topo.out_links(u):
+                v = link.dst
+                if v in visited:
+                    continue
+                has_unvisited = True
+                if budget is not None and sent >= budget:
+                    break
+                if not ten.free_int(link.id, t):
+                    continue
+                if topo.is_switch(v) and not ten.buffer_has_room(v, t + 1):
+                    continue  # paper §4.7: skip full switch at this timestep
+                visited[v] = float(t + 1)
+                pred[v] = (u, link.id, float(t), float(t + 1))
+                newly.append(v)
+                remaining.discard(v)
+                sent += 1
+                if not remaining:
+                    break
+            if not remaining:
+                break
+            if has_unvisited:
+                next_active.append(u)  # may still expand later
+        active = next_active + newly
+        t += 1
+
+    return _prune(cond.chunk, src, dests, pred, visited)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous earliest-arrival search (paper §4.6)
+# ---------------------------------------------------------------------------
+
+def bfs_cont(ten: TEN, cond: Condition, max_time: float | None = None) -> PathResult:
+    topo = ten.topology
+    src = cond.src
+    dests = cond.remote_dests
+    if not dests:
+        return PathResult([], {src: cond.release}, {src: cond.release})
+
+    if max_time is None:
+        slowest = max(
+            (l.transfer_time(cond.bytes) for l in topo.links), default=1.0
+        )
+        max_time = ten.horizon() + cond.release + slowest * (topo.num_nodes + 4)
+
+    visited: dict[int, float] = {}
+    pred: dict[int, tuple[int, int, float, float]] = {}
+    remaining = set(dests)
+    counter = 0
+    heap: list[tuple[float, int, int, int, float, float]] = []
+    # entry: (arrival, counter, from_node, link_id, start, end)
+
+    # Non-multicast switches serialize egress: iterate their out-links one at
+    # a time ("visits next nodes one by one", §4.7).
+    serial_state: dict[int, tuple[int, float]] = {}  # switch -> (next link idx, t_free)
+
+    def push_candidate(u: int, link, t_ready: float) -> None:
+        nonlocal counter
+        dur = link.transfer_time(cond.bytes)
+        start = ten.earliest_free(link.id, t_ready, dur)
+        end = start + dur
+        v = link.dst
+        # full-buffer switches delay the send until room exists on arrival
+        if topo.is_switch(v):
+            guard = 0
+            while not ten.buffer_has_room(v, end):
+                drop = ten.next_drop_after(v, end)
+                if drop == float("inf") or end > max_time:
+                    return  # permanently full: candidate abandoned
+                start = ten.earliest_free(link.id, max(t_ready, drop - dur), dur)
+                end = start + dur
+                guard += 1
+                if guard > 10000:
+                    raise AssertionError("switch buffer search did not converge")
+        if end > max_time:
+            return
+        counter += 1
+        heapq.heappush(heap, (end, counter, u, link.id, start, end))
+
+    def expand(u: int, t_arrive: float) -> None:
+        node_u = topo.nodes[u]
+        if topo.is_switch(u) and not node_u.multicast:
+            serial_state[u] = (0, t_arrive)
+            push_next_serial(u)
+        else:
+            for link in topo.out_links(u):
+                if link.dst not in visited:
+                    push_candidate(u, link, t_arrive)
+
+    def push_next_serial(u: int) -> None:
+        idx, t_free = serial_state[u]
+        outs = topo.out_links(u)
+        while idx < len(outs):
+            link = outs[idx]
+            serial_state[u] = (idx + 1, t_free)
+            if link.dst not in visited:
+                push_candidate(u, link, t_free)
+                return
+            idx += 1
+        serial_state[u] = (idx, t_free)
+
+    visited[src] = cond.release
+    expand(src, cond.release)
+
+    while remaining and heap:
+        end, _, u, link_id, start, t_end = heapq.heappop(heap)
+        link = topo.links[link_id]
+        v = link.dst
+        if topo.is_switch(u) and not topo.nodes[u].multicast:
+            # serialized egress: this send (whether used or not) defines when
+            # the next one may be attempted only if it was actually taken;
+            # if v was visited meanwhile, try the next out-link immediately.
+            if v in visited:
+                push_next_serial(u)
+                continue
+            visited[v] = t_end
+            pred[v] = (u, link_id, start, t_end)
+            remaining.discard(v)
+            idx, _ = serial_state[u]
+            serial_state[u] = (idx, t_end)  # egress busy until this send ends
+            push_next_serial(u)
+            expand(v, t_end)
+        else:
+            if v in visited:
+                continue
+            visited[v] = t_end
+            pred[v] = (u, link_id, start, t_end)
+            remaining.discard(v)
+            expand(v, t_end)
+
+    if remaining:
+        raise AssertionError(
+            f"chunk {cond.chunk}: unreachable dests {sorted(remaining)} "
+            f"within horizon {max_time}"
+        )
+    return _prune(cond.chunk, src, dests, pred, visited)

@@ -1,0 +1,114 @@
+"""Time-Expanded Network (paper §2.6, §4.2).
+
+The TEN fuses spatial topology with time. The paper presents it as a boolean
+matrix ``TEN[t][s][d]`` for unit-timestep (homogeneous) networks, generalized
+to alpha-beta continuous times for heterogeneous ones (paper §4.6, Fig. 9-10).
+
+We implement one structure covering both: every physical link carries a sorted
+list of *busy intervals* committed by previously synthesized conditions. For a
+homogeneous network with uniform chunk size this degenerates to the paper's
+integer-timestep TEN (every interval is [k, k+1)), and a fast integer path is
+provided. "Removing TEN links" (paper Fig. 7/10) = committing a busy interval:
+any other chunk overlapping it is excluded, which is exactly the paper's rule
+that a TEN link is occupied by at most one chunk.
+
+Switches (paper §4.7) additionally carry residency intervals (chunks buffered)
+used to enforce finite buffer limits during pathfinding.
+"""
+
+from __future__ import annotations
+
+import bisect
+from collections import defaultdict
+
+from repro.topology.topology import Topology
+
+_EPS = 1e-9
+
+
+class TEN:
+    def __init__(self, topology: Topology):
+        self.topology = topology
+        # per-link sorted, disjoint busy intervals [(start, end), ...]
+        self._busy: list[list[tuple[float, float]]] = [
+            [] for _ in range(topology.num_links)
+        ]
+        # per-switch committed chunk-residency intervals
+        self._residency: dict[int, list[tuple[float, float]]] = defaultdict(list)
+        # integer fast path: per-link set of occupied unit timesteps
+        self._busy_int: list[set[int]] = [set() for _ in range(topology.num_links)]
+
+    # ------------------------------------------------------------------
+    # Continuous (heterogeneous) interface — paper §4.6
+    # ------------------------------------------------------------------
+    def earliest_free(self, link: int, t: float, dur: float) -> float:
+        """Earliest start >= t such that [start, start+dur) avoids busy slots."""
+        intervals = self._busy[link]
+        start = t
+        i = bisect.bisect_left(intervals, (start - _EPS, float("-inf")))
+        # also consider the interval just before, which may cover `start`
+        if i > 0 and intervals[i - 1][1] > start + _EPS:
+            start = intervals[i - 1][1]
+        while i < len(intervals):
+            s, e = intervals[i]
+            if start + dur <= s + _EPS:
+                return start
+            start = max(start, e)
+            i += 1
+        return start
+
+    def commit(self, link: int, start: float, end: float) -> None:
+        intervals = self._busy[link]
+        i = bisect.bisect_left(intervals, (start, end))
+        if i > 0 and intervals[i - 1][1] > start + _EPS:
+            raise AssertionError(f"link {link}: overlap committing [{start},{end})")
+        if i < len(intervals) and intervals[i][0] < end - _EPS:
+            raise AssertionError(f"link {link}: overlap committing [{start},{end})")
+        intervals.insert(i, (start, end))
+
+    # ------------------------------------------------------------------
+    # Integer fast path (homogeneous, uniform chunk size) — paper §4.2
+    # ------------------------------------------------------------------
+    def free_int(self, link: int, t: int) -> bool:
+        return t not in self._busy_int[link]
+
+    def earliest_free_int(self, link: int, t: int) -> int:
+        busy = self._busy_int[link]
+        while t in busy:
+            t += 1
+        return t
+
+    def commit_int(self, link: int, t: int) -> None:
+        if t in self._busy_int[link]:
+            raise AssertionError(f"link {link}: timestep {t} already occupied")
+        self._busy_int[link].add(t)
+
+    # ------------------------------------------------------------------
+    # Switch residency (buffer limits) — paper §4.7
+    # ------------------------------------------------------------------
+    def occupancy_at(self, switch: int, t: float) -> int:
+        return sum(1 for s, e in self._residency[switch] if s - _EPS <= t < e - _EPS)
+
+    def next_drop_after(self, switch: int, t: float) -> float:
+        """Earliest residency end > t (inf if none)."""
+        ends = [e for _, e in self._residency[switch] if e > t + _EPS]
+        return min(ends) if ends else float("inf")
+
+    def buffer_has_room(self, switch: int, t: float) -> bool:
+        limit = self.topology.nodes[switch].buffer_limit
+        return limit is None or self.occupancy_at(switch, t) < limit
+
+    def commit_residency(self, switch: int, start: float, end: float) -> None:
+        self._residency[switch].append((start, max(end, start)))
+
+    # ------------------------------------------------------------------
+    def horizon(self) -> float:
+        """Latest committed busy end (safety bound for searches)."""
+        h = 0.0
+        for intervals in self._busy:
+            if intervals:
+                h = max(h, intervals[-1][1])
+        for busy in self._busy_int:
+            if busy:
+                h = max(h, max(busy) + 1)
+        return h

@@ -1,0 +1,131 @@
+"""Translate synthesis results into executable representations (paper §4.8).
+
+The paper exports to MSCCL / MSCCL++ for GPU execution. Our deployment
+substrate is JAX on TPU, so the primary translation is a *ppermute program*:
+the timed transfer schedule is bucketed into rounds; each round becomes one
+(or more) ``jax.lax.ppermute`` calls inside ``shard_map`` (see
+``repro.comms.executor``). A congestion-free PCCL schedule whose transfers
+ride physical-neighbor links translates to neighbor-only permutes on the TPU
+torus, preserving the synthesizer's no-contention invariant.
+
+An MSCCL-IR-style JSON export is retained for interoperability/debugging.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.core.algorithm import CollectiveAlgorithm, Transfer
+
+
+@dataclass(frozen=True)
+class Send:
+    src: int
+    dst: int
+    chunk: int
+    reduce: bool = False
+
+
+@dataclass
+class PpermuteProgram:
+    """A list of rounds; each round is a set of sends where every device
+    appears at most once as a source and at most once as a destination —
+    i.e. each round is directly one ``lax.ppermute`` permutation."""
+
+    num_devices: int
+    rounds: list[list[Send]] = field(default_factory=list)
+    # chunk -> condition metadata for buffer planning. Plain chunks have one
+    # initial holder; reduced chunks start at every contributing device.
+    chunk_holders: dict[int, tuple[int, ...]] = field(default_factory=dict)
+    chunk_dests: dict[int, tuple[int, ...]] = field(default_factory=dict)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def chunk_srcs(self) -> dict[int, int]:
+        """Primary holder per chunk (the source for non-reduction chunks)."""
+        return {c: h[0] for c, h in self.chunk_holders.items()}
+
+
+def to_ppermute_program(
+    alg: CollectiveAlgorithm, device_of_npu: dict[int, int] | None = None
+) -> PpermuteProgram:
+    """Bucket timed transfers into dependency-honoring ppermute rounds.
+
+    Transfers are grouped by start time (identical start = same wave of the
+    synchronous schedule); each wave is split greedily so that within one
+    round every device sends at most one chunk and receives at most one chunk
+    (ppermute semantics). Store-and-forward causality is kept because waves
+    execute in start-time order and a chunk's forward always starts at or
+    after its arrival wave.
+    """
+    if device_of_npu is None:
+        device_of_npu = {n: n for n in alg.topology.npus}
+    for t in alg.transfers:
+        if alg.topology.is_switch(t.src) or alg.topology.is_switch(t.dst):
+            raise ValueError(
+                "ppermute translation requires NPU-to-NPU schedules; "
+                "unroll switches or use the JSON export"
+            )
+    waves: dict[float, list[Transfer]] = defaultdict(list)
+    for t in alg.transfers:
+        waves[round(t.start, 9)].append(t)
+
+    prog = PpermuteProgram(num_devices=len(device_of_npu))
+    for c in alg.conditions:
+        holders = c.srcs if hasattr(c, "srcs") else (c.src,)
+        prog.chunk_holders[c.chunk] = tuple(
+            sorted(device_of_npu[s] for s in holders)
+        )
+        prog.chunk_dests[c.chunk] = tuple(
+            sorted(device_of_npu[d] for d in c.dests)
+        )
+    for start in sorted(waves):
+        pending = sorted(waves[start], key=lambda t: (t.src, t.dst, t.chunk))
+        while pending:
+            used_src: set[int] = set()
+            used_dst: set[int] = set()
+            round_sends: list[Send] = []
+            rest: list[Transfer] = []
+            for t in pending:
+                s, d = device_of_npu[t.src], device_of_npu[t.dst]
+                if s in used_src or d in used_dst:
+                    rest.append(t)
+                    continue
+                used_src.add(s)
+                used_dst.add(d)
+                round_sends.append(Send(s, d, t.chunk, t.reduce))
+            prog.rounds.append(round_sends)
+            pending = rest
+    return prog
+
+
+def to_msccl_json(alg: CollectiveAlgorithm) -> str:
+    """MSCCL-IR-flavored JSON: per-NPU ordered op lists with explicit
+    dependencies implied by transfer times."""
+    ops_by_npu: dict[int, list[dict]] = defaultdict(list)
+    for i, t in enumerate(alg.transfers):
+        ops_by_npu[t.src].append(
+            {"op": "send", "chunk": t.chunk, "peer": t.dst, "t_start": t.start,
+             "t_end": t.end, "link": t.link, "idx": i}
+        )
+        kind = "recv_reduce" if t.reduce else "recv"
+        ops_by_npu[t.dst].append(
+            {"op": kind, "chunk": t.chunk, "peer": t.src, "t_start": t.start,
+             "t_end": t.end, "link": t.link, "idx": i}
+        )
+    doc = {
+        "name": alg.name,
+        "topology": alg.topology.name,
+        "num_npus": len(alg.topology.npus),
+        "makespan": alg.makespan,
+        "gpus": [
+            {"id": npu, "ops": sorted(ops, key=lambda o: (o["t_start"], o["idx"]))}
+            for npu, ops in sorted(ops_by_npu.items())
+        ],
+    }
+    return json.dumps(doc, indent=1)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately naive implementations (dense attention; step-by-step recurrent
+SSD) — independent of both the kernels and the model code — used by the
+per-kernel allclose sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Dense GQA attention. q: [B,S,H,hd]; k/v: [B,T,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    kk = jnp.repeat(k, group, axis=2)  # [B,T,H,hd]
+    vv = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(xh, dt, A, Bm, Cm):
+    """Token-by-token SSD recurrence (the definitional form).
+
+    xh: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (<0);
+    Bm/Cm: [B,S,N]. Returns y: [B,S,H,P].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ;  y_t = h_t C_t
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dt_t * A[None, :])  # [B,H]
+        dBx = jnp.einsum("bn,bhp->bhpn", b_t, x_t * dt_t[..., None])
+        h = h * decay[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype)

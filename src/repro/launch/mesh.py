@@ -1,0 +1,39 @@
+"""Production device meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and smoke tests/benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one TPU-v5e-like pod,
+    2D torus). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod
+    axis is pure data parallelism across the DCI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(data: int = 2, model: int = 4, *, pods: int = 0):
+    """Small mesh for CPU integration tests (requires forced host devices)."""
+    if pods:
+        return jax.make_mesh(
+            (pods, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -1,0 +1,205 @@
+"""Sharding rules: param/activation PartitionSpecs for the production mesh.
+
+Strategy (see DESIGN.md §4): Megatron-style tensor parallelism on the
+"model" axis + ZeRO/FSDP sharding of the complementary weight dim on the
+"data" axis + pure data parallelism on the "pod" axis, with sequence
+parallelism (residual activations sharded on seq over "model") bounding
+activation memory for the 4k/32k shapes.
+
+Head counts that don't divide the TP degree are padded (llava 56->64,
+granite-3b 24->32; zero-initialized wo rows keep the function exact); KV
+projections replicate on the model axis when kv_heads doesn't divide it.
+Every rule degrades to replication when a dim isn't divisible, so the same
+rules serve reduced smoke configs and small test meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def pad_heads(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad num_heads up to a multiple of tp (keeping GQA grouping legal)."""
+    h = cfg.num_heads
+    if h % tp == 0 or cfg.family == "ssm":
+        return cfg
+    hp = ((h + tp - 1) // tp) * tp
+    # keep grouping divisible: hp must be a multiple of kv heads
+    while hp % cfg.num_kv_heads:
+        hp += tp
+    return dataclasses.replace(cfg, num_heads=hp)
+
+
+@dataclass(eq=False)  # identity hash: used as a custom_vjp nondiff arg
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        sizes = dict(zip(names, self.mesh.devices.shape))
+        self.tp = "model" if "model" in names else None
+        self.tp_size = sizes.get("model", 1)
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        self.dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+        self.dp_size = int(np.prod([sizes[a] for a in ("pod", "data")
+                                    if a in names]))
+        self.fsdp = "data" if "data" in names else None
+        self.fsdp_size = sizes.get("data", 1)
+        self.all_axes = tuple(names)
+        self.total = int(np.prod(self.mesh.devices.shape))
+
+    # -- helpers -----------------------------------------------------------
+    def _div(self, dim: int, axis, size: int):
+        """axis if dim divides evenly, else None (replicate)."""
+        return axis if axis is not None and dim % size == 0 and size > 1 else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        return lax.with_sharding_constraint(x, self.named(spec))
+
+    # -- parameter specs ----------------------------------------------------
+    def param_spec(self, path: tuple, leaf) -> P:
+        cfg = self.cfg
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        last = names[-1]
+        shape = leaf.shape
+        stacked = ("layers" in names or "enc_layers" in names
+                   or "tail_layers" in names)
+        pre = (None,) if stacked else ()
+        tp, fsdp = self.tp, self.fsdp
+
+        def spec(*dims):
+            return P(*pre, *dims)
+
+        if last == "table":  # embedding [V, d]
+            # vocab on TP when divisible (best measured temp), else FSDP on d;
+            # the gather is done in bf16 (see layers.embed) so the reshard of
+            # its output never spills f32 copies.
+            v_ax = self._div(shape[0], tp, self.tp_size)
+            if v_ax:
+                return P(v_ax, self._div(shape[1], fsdp, self.fsdp_size))
+            return P(None, self._div(shape[1], fsdp, self.fsdp_size))
+        if names[-2] == "unembed":  # [d, V]
+            return P(self._div(shape[0], fsdp, self.fsdp_size),
+                     self._div(shape[1], tp, self.tp_size))
+        if last in ("wq",):
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size),
+                        self._div(shape[-1], tp, self.tp_size))
+        if last in ("wk", "wv"):
+            kv_ok = cfg.num_kv_heads % self.tp_size == 0
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size),
+                        tp if kv_ok and self.tp_size > 1 else None)
+        if last == "wo":
+            return spec(self._div(shape[-2], tp, self.tp_size),
+                        self._div(shape[-1], fsdp, self.fsdp_size))
+        if last in ("gate", "up"):
+            if len(shape) == len(pre) + 3:  # MoE experts [*, E, d, ffe]
+                return spec(self._div(shape[-3], tp, self.tp_size),
+                            self._div(shape[-2], fsdp, self.fsdp_size), None)
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size),
+                        self._div(shape[-1], tp, self.tp_size))
+        if last == "down":
+            if len(shape) == len(pre) + 3:  # MoE [*, E, ffe, d]
+                return spec(self._div(shape[-3], tp, self.tp_size), None,
+                            self._div(shape[-1], fsdp, self.fsdp_size))
+            return spec(self._div(shape[-2], tp, self.tp_size),
+                        self._div(shape[-1], fsdp, self.fsdp_size))
+        if last == "router":
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size), None)
+        if last in ("w_z", "w_x"):  # [*, d, d_inner] head-parallel
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size),
+                        self._div(shape[-1], tp, self.tp_size))
+        if last in ("w_B", "w_C"):  # group-shared: replicate state dim
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size), None)
+        if last == "w_dt":
+            return spec(self._div(shape[-2], fsdp, self.fsdp_size),
+                        self._div(shape[-1], tp, self.tp_size))
+        if last == "conv_x":
+            return spec(None, self._div(shape[-1], tp, self.tp_size))
+        if last in ("conv_B", "conv_C"):
+            return spec(None, None)
+        if last in ("dt_bias", "A_log", "D"):
+            return spec(self._div(shape[-1], tp, self.tp_size))
+        if last == "out_proj":  # [*, d_inner, d]
+            return spec(self._div(shape[-2], tp, self.tp_size),
+                        self._div(shape[-1], fsdp, self.fsdp_size))
+        if last == "norm_scale":
+            return spec(self._div(shape[-1], tp, self.tp_size))
+        if last == "scale":  # RMSNorm
+            return spec(None)
+        # default: replicate
+        return P(*((None,) * len(shape)))
+
+    def param_shardings(self, params):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self.named(self.param_spec(path, leaf)), params
+        )
+
+    def param_specs(self, params):
+        return jax.tree_util.tree_map_with_path(self.param_spec, params)
+
+    # -- activation specs ---------------------------------------------------
+    @property
+    def seq_spec(self) -> P:
+        """Residual stream [B, S, d]: batch on DP, seq on TP (Megatron SP)."""
+        return P(self.dp, self.tp, None)
+
+    def batch_spec(self, batch_size: int, seq_len: int) -> P:
+        """Token batches [B, S]."""
+        dp = self.dp if batch_size % self.dp_size == 0 else None
+        s = self.tp if seq_len % max(self.tp_size, 1) == 0 else None
+        return P(dp, s)
+
+    def token_spec(self, batch_size: int) -> P:
+        return P(self.dp if batch_size % self.dp_size == 0 else None)
+
+    def kv_cache_spec(self, batch_size: int, seq_len: int) -> P:
+        """[L, B, S, KV, hd]: batch on DP, seq on TP; batch-1 long-context
+        shards seq over every axis (256/512-way context parallelism)."""
+        if batch_size == 1:
+            all_sz = self.total
+            s = self.all_axes if seq_len % all_sz == 0 else (
+                self.tp if seq_len % self.tp_size == 0 else None)
+            return P(None, None, s, None, None)
+        dp = self.dp if batch_size % self.dp_size == 0 else None
+        s = self.tp if seq_len % max(self.tp_size, 1) == 0 else None
+        return P(None, dp, s, None, None)
+
+    def ssm_cache_spec(self, field: str, batch_size: int, leaf) -> P:
+        dp = self.dp if batch_size % self.dp_size == 0 else None
+        if field == "state":  # [L, B, H, P, N]
+            h = self.tp if leaf.shape[2] % max(self.tp_size, 1) == 0 else None
+            return P(None, dp, h, None, None)
+        if field == "conv_x":  # [L, B, K-1, d_inner]
+            c = self.tp if leaf.shape[3] % max(self.tp_size, 1) == 0 else None
+            return P(None, dp, None, c)
+        return P(None, dp, None, None)  # conv_B / conv_C
+
+    def cache_shardings(self, cache, batch_size: int):
+        """Map a decode cache pytree to NamedShardings (shape-aware)."""
+
+        def spec_for(path, leaf):
+            names = [getattr(k, "key", str(k)) for k in path]
+            if "kv" in names or "cross" in names:
+                return self.named(
+                    self.kv_cache_spec(batch_size, leaf.shape[2]))
+            return self.named(self.ssm_cache_spec(names[-1], batch_size, leaf))
+
+        return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+    def logits_spec(self, batch_size: int) -> P:
+        dp = self.dp if batch_size % self.dp_size == 0 else None
+        v = self.tp if self.cfg.vocab_size % max(self.tp_size, 1) == 0 else None
+        return P(dp, v)

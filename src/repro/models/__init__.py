@@ -1,0 +1,3 @@
+from repro.models.transformer import LM
+
+__all__ = ["LM"]

@@ -1,0 +1,134 @@
+"""Shared neural-net building blocks (pure JAX, param pytrees, no framework).
+
+Parameters live in nested dicts of jnp arrays; layer stacks keep a leading
+[num_layers, ...] axis so the transformer body is one `lax.scan` — compile
+time stays flat in depth, which matters for the 512-device dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * p["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full or partial/"2d" rotary a la ChatGLM)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float,
+                rotary_pct: float = 1.0):
+    """cos/sin tables [*, rot_dim/2] for the rotated prefix of head_dim."""
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    )
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(angles), jnp.sin(angles), rot_dim
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, rot_dim: int):
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, rot_dim/2]."""
+    rot, keep = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = rot[..., 0::2], rot[..., 1::2]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    rotated = jnp.stack([y1, y2], axis=-1).reshape(rot.shape)
+    return jnp.concatenate([rotated, keep], axis=-1) if keep.shape[-1] else rotated
+
+
+# ---------------------------------------------------------------------------
+# Dense projections / SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int) -> Params:
+    return {"w": _init(key, (d_in, d_out))}
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"].astype(x.dtype)
+
+
+def swiglu_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": _init(k1, (d, d_ff)),
+        "up": _init(k2, (d, d_ff)),
+        "down": _init(k3, (d_ff, d)),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    g = x @ p["gate"].astype(x.dtype)
+    u = x @ p["up"].astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ p["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": _init(key, (vocab, d), scale=0.02)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    # cast the (sharded, param-sized) table BEFORE the gather: gathering in
+    # f32 materializes an f32 activation that GSPMD may replicate while
+    # resharding (half the bytes -> half the spill)
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    # bf16 operands, f32 accumulation/logits: avoids materializing an f32
+    # copy of the activations (28 GiB/device on llava before this)
+    w = p["table"].T.astype(x.dtype)
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def unembed_separate(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.matmul(x, p["w"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; labels < 0 are masked."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

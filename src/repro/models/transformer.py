@@ -1,0 +1,564 @@
+"""Transformer assembly for every assigned architecture family.
+
+One functional `LM` facade per config:
+
+  * init(rng)                      -> params (stacked-layer pytree)
+  * loss(params, batch)            -> (scalar loss, metrics)
+  * decode_init(batch, max_seq)    -> KV/SSM caches
+  * decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Layer stacks keep a leading [L, ...] axis and the body is one lax.scan, so
+HLO size (and 512-device compile time) is depth-independent.
+
+Families:
+  dense    — GQA + SwiGLU (llama3.2, chatglm3, internlm2, h2o-danube w/ SWA)
+  moe      — GQA + top-k MoE FFN (granite couple)
+  ssm      — Mamba2/SSD stack (mamba2-370m), attention-free
+  hybrid   — Mamba2 stack + one shared attention block every K layers (zamba2)
+  encdec   — whisper-medium: bidirectional encoder (audio-stub) + causal
+             decoder with cross attention
+  vlm      — llava-next: decoder LM consuming [patch-stub ++ token] embeddings
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Params,
+    embed,
+    embedding_init,
+    linear_init,
+    rms_norm,
+    rms_norm_init,
+    softmax_xent,
+    swiglu,
+    swiglu_init,
+    unembed,
+    unembed_separate,
+)
+
+
+def _stack_layers(key, n: int, init_one):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, *, ep_degree: int = 1,
+                 use_flash: bool = False, policy=None, remat: bool = False):
+        """`policy` (launch.sharding.ShardingPolicy) adds Megatron-style
+        sequence-parallel constraints on the residual stream; `remat`
+        rematerializes each block in the backward pass."""
+        self.cfg = cfg
+        self.ep_degree = ep_degree
+        self.use_flash = use_flash
+        self.policy = policy
+        self.remat = remat
+        self.e_pad = cfg.padded_experts(ep_degree) if cfg.is_moe else 0
+
+    def _constrain_seq(self, h):
+        pol = self.policy
+        if pol is None or pol.tp is None or pol.tp_size <= 1:
+            return h
+        if h.ndim != 3 or h.shape[1] % pol.tp_size:
+            return h
+        return pol.constrain(h, pol.seq_spec)
+
+    def _maybe_remat(self, fn):
+        # prevent_cse=False: we only remat inside lax.scan, which already
+        # isolates iterations — the default CSE-prevention barriers force an
+        # extra f32 copy of the residual stream to be stacked per layer
+        # (13 GiB/device on llava train_4k)
+        return jax.checkpoint(fn, prevent_cse=False) if self.remat else fn
+
+    def _seq_pad(self) -> int:
+        """Pad unit for concatenated (patch ++ token) sequences: a multiple
+        of the attention block and the TP degree keeps blockwise attention
+        tiled and sequence parallelism divisible."""
+        tp = self.policy.tp_size if self.policy is not None else 1
+        return 512 * max(tp, 1)
+
+    def _pad_seq(self, h):
+        """Right-pad the sequence dim; tail positions only attend causally
+        among themselves and are sliced off before the loss."""
+        pad_to = self._seq_pad()
+        S = h.shape[1]
+        rem = (-S) % pad_to
+        if rem == 0:
+            return h, S
+        return jnp.pad(h, ((0, 0), (0, rem), (0, 0))), S
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _attn_init(self, key):
+        c = self.cfg
+        return attn.attention_init(key, c.d_model, c.num_heads, c.num_kv_heads,
+                                   c.head_dim)
+
+    def _block_init(self, key):
+        c = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "ln1": rms_norm_init(c.d_model),
+            "attn": self._attn_init(k1),
+            "ln2": rms_norm_init(c.d_model),
+        }
+        if c.is_moe:
+            p["moe"] = moe_mod.moe_init(k2, c.d_model, c.moe_d_ff,
+                                        c.num_experts, self.e_pad)
+        else:
+            p["mlp"] = swiglu_init(k2, c.d_model, c.d_ff)
+        return p
+
+    def _mamba_block_init(self, key):
+        c = self.cfg
+        k1, _ = jax.random.split(key)
+        return {
+            "ln": rms_norm_init(c.d_model),
+            "ssd": ssm_mod.ssd_init(k1, c.d_model, expand=c.ssm_expand,
+                                    head_dim=c.ssm_head_dim, state=c.ssm_state,
+                                    conv_width=c.ssm_conv_width),
+        }
+
+    def init(self, rng) -> Params:
+        c = self.cfg
+        keys = jax.random.split(rng, 8)
+        params: Params = {
+            "embed": embedding_init(keys[0], c.vocab_size, c.d_model),
+            "final_ln": rms_norm_init(c.d_model),
+        }
+        if not c.tie_embeddings:
+            params["unembed"] = linear_init(keys[1], c.d_model, c.vocab_size)
+        if c.family in ("dense", "moe", "vlm"):
+            params["layers"] = _stack_layers(keys[2], c.num_layers,
+                                             self._block_init)
+        elif c.family == "ssm":
+            params["layers"] = _stack_layers(keys[2], c.num_layers,
+                                             self._mamba_block_init)
+        elif c.family == "hybrid":
+            period = c.hybrid_attn_period
+            groups, rem = divmod(c.num_layers, period)
+            params["layers"] = _stack_layers(keys[2], groups * period,
+                                             self._mamba_block_init)
+            if rem:
+                params["tail_layers"] = _stack_layers(keys[3], rem,
+                                                      self._mamba_block_init)
+            params["shared_attn"] = self._block_init(keys[4])
+        elif c.family == "encdec":
+            params["enc_layers"] = _stack_layers(keys[2], c.encoder_layers,
+                                                 self._block_init)
+            params["enc_ln"] = rms_norm_init(c.d_model)
+
+            def dec_init(k):
+                k1, k2, k3 = jax.random.split(k, 3)
+                return {
+                    "ln1": rms_norm_init(c.d_model),
+                    "attn": self._attn_init(k1),
+                    "ln_x": rms_norm_init(c.d_model),
+                    "xattn": self._attn_init(k2),
+                    "ln2": rms_norm_init(c.d_model),
+                    "mlp": swiglu_init(k3, c.d_model, c.d_ff),
+                }
+
+            params["layers"] = _stack_layers(keys[3], c.num_layers, dec_init)
+        else:
+            raise ValueError(c.family)
+        return params
+
+    # ------------------------------------------------------------------
+    # blocks (train)
+    # ------------------------------------------------------------------
+    def _attn_block(self, p, x, *, causal=True, window=None, positions=None):
+        c = self.cfg
+        return attn.attention_train(
+            p, x,
+            num_heads=c.num_heads, num_kv_heads=c.num_kv_heads,
+            head_dim=c.head_dim, rope_theta=c.rope_theta,
+            rotary_pct=c.rotary_pct, causal=causal,
+            window=c.sliding_window if window is None else window,
+            softcap=c.attn_logit_softcap, positions=positions,
+            use_flash=self.use_flash, policy=self.policy,
+        )
+
+    def _block(self, p, x, *, causal=True, positions=None):
+        c = self.cfg
+        h = x + self._attn_block(p["attn"], rms_norm(p["ln1"], x, c.norm_eps),
+                                 causal=causal, positions=positions)
+        moe_aux = jnp.zeros((), jnp.float32)
+        if c.is_moe:
+            y, moe_aux = moe_mod.moe_ffn(
+                p["moe"], rms_norm(p["ln2"], h, c.norm_eps),
+                num_experts=c.num_experts,
+                experts_per_token=c.experts_per_token,
+                capacity_factor=c.capacity_factor,
+            )
+        else:
+            y = swiglu(p["mlp"], rms_norm(p["ln2"], h, c.norm_eps))
+        return h + y, moe_aux
+
+    def _mamba_block(self, p, x):
+        c = self.cfg
+        return x + ssm_mod.ssd_block(
+            p["ssd"], rms_norm(p["ln"], x, c.norm_eps),
+            head_dim=c.ssm_head_dim, state=c.ssm_state, chunk=c.ssm_chunk,
+            conv_width=c.ssm_conv_width, policy=self.policy,
+        )
+
+    # ------------------------------------------------------------------
+    # forward (train)
+    # ------------------------------------------------------------------
+    def _body_dense(self, params, h, *, causal=True):
+        block = self._maybe_remat(
+            lambda lp, h: self._block(lp, h, causal=causal))
+
+        def step(carry, lp):
+            h, aux = carry
+            h, a = block(lp, h)
+            h = self._constrain_seq(h)
+            return (h, aux + a), None
+
+        h = self._constrain_seq(h)
+        (h, aux), _ = lax.scan(step, (h, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+        return h, aux
+
+    def _body_ssm(self, params, h):
+        block = self._maybe_remat(lambda lp, h: self._mamba_block(lp, h))
+
+        def step(h, lp):
+            return self._constrain_seq(block(lp, h)), None
+
+        h, _ = lax.scan(step, self._constrain_seq(h), params["layers"])
+        return h, jnp.zeros((), jnp.float32)
+
+    def _body_hybrid(self, params, h):
+        c = self.cfg
+        period = c.hybrid_attn_period
+        groups = c.num_layers // period
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, period, *a.shape[1:]), params["layers"]
+        )
+        mamba = self._maybe_remat(lambda lp, h: self._mamba_block(lp, h))
+        shared = self._maybe_remat(
+            lambda sp, h: self._block(sp, h)[0])
+
+        def group_step(h, glp):
+            def inner(h2, lp):
+                return self._constrain_seq(mamba(lp, h2)), None
+
+            h, _ = lax.scan(inner, h, glp)
+            h = self._constrain_seq(shared(params["shared_attn"], h))
+            return h, None
+
+        h, _ = lax.scan(group_step, self._constrain_seq(h), stacked)
+        if "tail_layers" in params:
+            def inner(h2, lp):
+                return self._constrain_seq(mamba(lp, h2)), None
+
+            h, _ = lax.scan(inner, h, params["tail_layers"])
+        return h, jnp.zeros((), jnp.float32)
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings [B, T, d]."""
+        h = frames
+        block = self._maybe_remat(
+            lambda lp, h: self._block(lp, h, causal=False)[0])
+
+        def step(h, lp):
+            return block(lp, h), None
+
+        h, _ = lax.scan(step, h, params["enc_layers"])
+        return rms_norm(params["enc_ln"], h, self.cfg.norm_eps)
+
+    def _body_encdec(self, params, h, enc_out):
+        c = self.cfg
+
+        def one(lp, h):
+            hh = h + self._attn_block(lp["attn"],
+                                      rms_norm(lp["ln1"], h, c.norm_eps))
+            kv = attn.encode_cross_kv(lp["xattn"], enc_out,
+                                      num_kv_heads=c.num_kv_heads,
+                                      head_dim=c.head_dim)
+            hh = hh + attn.cross_attention(
+                lp["xattn"], rms_norm(lp["ln_x"], hh, c.norm_eps), kv,
+                num_heads=c.num_heads, head_dim=c.head_dim)
+            hh = hh + swiglu(lp["mlp"], rms_norm(lp["ln2"], hh, c.norm_eps))
+            return hh
+
+        block = self._maybe_remat(one)
+
+        def step(h, lp):
+            return self._constrain_seq(block(lp, h)), None
+
+        h, _ = lax.scan(step, self._constrain_seq(h), params["layers"])
+        return h, jnp.zeros((), jnp.float32)
+
+    def _logits(self, params, h):
+        c = self.cfg
+        h = rms_norm(params["final_ln"], h, c.norm_eps)
+        logits = (unembed(params["embed"], h) if c.tie_embeddings
+                  else unembed_separate(params["unembed"], h))
+        if logits.ndim == 3:
+            pol = self.policy
+            if pol is not None and pol.tp is not None and pol.tp_size > 1 \
+                    and logits.shape[1] % pol.tp_size == 0:
+                from jax.sharding import PartitionSpec as P
+
+                logits = pol.constrain(logits, P(pol.dp, pol.tp, None))
+        return logits
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        """batch: tokens [B,S], labels [B,S]; + 'frames' [B,T,d] (encdec) or
+        'patches' [B,P,d] (vlm)."""
+        c = self.cfg
+        dtype = jnp.bfloat16 if c.dtype == "bfloat16" else jnp.float32
+        h = embed(params["embed"], batch["tokens"], dtype)
+        aux = jnp.zeros((), jnp.float32)
+        if c.family in ("dense", "moe"):
+            h, aux = self._body_dense(params, h)
+        elif c.family == "vlm":
+            patches = batch["patches"].astype(dtype)  # [B, P, d] stub
+            npatch = patches.shape[1]
+            h = jnp.concatenate([patches, h], axis=1)
+            h, true_len = self._pad_seq(h)
+            h, aux = self._body_dense(params, h)
+            # loss masking instead of slicing h: a mid-graph seq slice forces
+            # an awkward reshard under GSPMD; padded labels keep shapes static
+            B = h.shape[0]
+            labels = batch["labels"]
+            pad_tail = h.shape[1] - true_len
+            labels = jnp.concatenate(
+                [jnp.full((B, npatch), -1, labels.dtype), labels,
+                 jnp.full((B, pad_tail), -1, labels.dtype)], axis=1)
+            logits = self._logits(params, h)
+            xent = softmax_xent(logits, labels)
+            loss = xent + 0.01 * aux
+            return loss, {"xent": xent, "moe_aux": aux}
+        elif c.family == "ssm":
+            h, aux = self._body_ssm(params, h)
+        elif c.family == "hybrid":
+            h, aux = self._body_hybrid(params, h)
+        elif c.family == "encdec":
+            enc_out = self._encode(params, batch["frames"].astype(dtype))
+            h, aux = self._body_encdec(params, h, enc_out)
+        else:
+            raise ValueError(c.family)
+        logits = self._logits(params, h)
+        xent = softmax_xent(logits, batch["labels"])
+        loss = xent + 0.01 * aux
+        return loss, {"xent": xent, "moe_aux": aux}
+
+    def forward_logits(self, params, batch) -> jax.Array:
+        """Inference prefill: full-sequence logits (same compute shape as the
+        loss path, no labels). [B, S, vocab]."""
+        c = self.cfg
+        dtype = jnp.bfloat16 if c.dtype == "bfloat16" else jnp.float32
+        h = embed(params["embed"], batch["tokens"], dtype)
+        if c.family in ("dense", "moe"):
+            h, _ = self._body_dense(params, h)
+        elif c.family == "vlm":
+            patches = batch["patches"].astype(dtype)
+            h = jnp.concatenate([patches, h], axis=1)
+            h, true_len = self._pad_seq(h)
+            h, _ = self._body_dense(params, h)
+            h = h[:, patches.shape[1]:true_len, :]
+        elif c.family == "ssm":
+            h, _ = self._body_ssm(params, h)
+        elif c.family == "hybrid":
+            h, _ = self._body_hybrid(params, h)
+        elif c.family == "encdec":
+            enc_out = self._encode(params, batch["frames"].astype(dtype))
+            h, _ = self._body_encdec(params, h, enc_out)
+        else:
+            raise ValueError(c.family)
+        return self._logits(params, h)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_init(self, batch_size: int, max_seq: int,
+                    dtype=jnp.bfloat16) -> Params:
+        c = self.cfg
+        kv_len = min(max_seq, c.sliding_window) if c.sliding_window > 0 else max_seq
+
+        def kv(n):
+            return {
+                "k": jnp.zeros((n, batch_size, kv_len, c.num_kv_heads,
+                                c.head_dim), dtype),
+                "v": jnp.zeros((n, batch_size, kv_len, c.num_kv_heads,
+                                c.head_dim), dtype),
+            }
+
+        def ssm(n):
+            return {
+                "state": jnp.zeros((n, batch_size, c.ssm_heads, c.ssm_head_dim,
+                                    c.ssm_state), jnp.float32),
+                "conv_x": jnp.zeros((n, batch_size, c.ssm_conv_width - 1,
+                                     c.d_inner), jnp.float32),
+                "conv_B": jnp.zeros((n, batch_size, c.ssm_conv_width - 1,
+                                     c.ssm_state), jnp.float32),
+                "conv_C": jnp.zeros((n, batch_size, c.ssm_conv_width - 1,
+                                     c.ssm_state), jnp.float32),
+            }
+
+        if c.family in ("dense", "moe", "vlm"):
+            return {"kv": kv(c.num_layers)}
+        if c.family == "ssm":
+            return {"ssm": ssm(c.num_layers)}
+        if c.family == "hybrid":
+            period = c.hybrid_attn_period
+            groups, rem = divmod(c.num_layers, period)
+            cache = {"ssm": ssm(groups * period), "kv": kv(groups)}
+            if rem:
+                cache["ssm_tail"] = ssm(rem)
+            return cache
+        if c.family == "encdec":
+            return {
+                "kv": kv(c.num_layers),
+                # cross-attention KV computed at prefill from encoder output
+                "cross": {
+                    "k": jnp.zeros((c.num_layers, batch_size, c.encoder_seq,
+                                    c.num_kv_heads, c.head_dim), dtype),
+                    "v": jnp.zeros((c.num_layers, batch_size, c.encoder_seq,
+                                    c.num_kv_heads, c.head_dim), dtype),
+                },
+            }
+        raise ValueError(c.family)
+
+    def _attn_decode(self, p, x, kv_slice, pos):
+        c = self.cfg
+        return attn.attention_decode(
+            p, x, kv_slice, pos,
+            num_heads=c.num_heads, num_kv_heads=c.num_kv_heads,
+            head_dim=c.head_dim, rope_theta=c.rope_theta,
+            rotary_pct=c.rotary_pct, window=c.sliding_window,
+            softcap=c.attn_logit_softcap,
+        )
+
+    def _block_decode(self, lp, x, kv_slice, pos):
+        c = self.cfg
+        h_in = rms_norm(lp["ln1"], x, c.norm_eps)
+        a, new_kv = self._attn_decode(lp["attn"], h_in, kv_slice, pos)
+        h = x + a
+        if c.is_moe:
+            y, _ = moe_mod.moe_ffn(
+                lp["moe"], rms_norm(lp["ln2"], h, c.norm_eps),
+                num_experts=c.num_experts,
+                experts_per_token=c.experts_per_token,
+                capacity_factor=c.capacity_factor,
+            )
+        else:
+            y = swiglu(lp["mlp"], rms_norm(lp["ln2"], h, c.norm_eps))
+        return h + y, new_kv
+
+    def _mamba_decode(self, lp, x, ssm_slice):
+        c = self.cfg
+        y, new_cache = ssm_mod.ssd_decode_step(
+            lp["ssd"], rms_norm(lp["ln"], x, c.norm_eps), ssm_slice,
+            head_dim=c.ssm_head_dim, state=c.ssm_state,
+        )
+        return x + y, new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: [B] int32; pos: [] absolute position. Returns
+        (logits [B, vocab], new cache)."""
+        c = self.cfg
+        dtype = jnp.bfloat16 if c.dtype == "bfloat16" else jnp.float32
+        x = embed(params["embed"], tokens[:, None], dtype)  # [B,1,d]
+
+        if c.family in ("dense", "moe", "vlm"):
+            def step(x, inp):
+                lp, kv_slice = inp
+                x, new_kv = self._block_decode(lp, x, kv_slice, pos)
+                return x, new_kv
+
+            x, new_kv = lax.scan(step, x, (params["layers"], cache["kv"]))
+            cache = {"kv": new_kv}
+        elif c.family == "ssm":
+            def step(x, inp):
+                lp, sl = inp
+                x, new = self._mamba_decode(lp, x, sl)
+                return x, new
+
+            x, new_ssm = lax.scan(step, x, (params["layers"], cache["ssm"]))
+            cache = {"ssm": new_ssm}
+        elif c.family == "hybrid":
+            period = c.hybrid_attn_period
+            groups = c.num_layers // period
+            stacked = jax.tree.map(
+                lambda a: a.reshape(groups, period, *a.shape[1:]),
+                params["layers"])
+            ssm_stacked = jax.tree.map(
+                lambda a: a.reshape(groups, period, *a.shape[1:]),
+                cache["ssm"])
+
+            def group_step(x, inp):
+                glp, gssm, kv_slice = inp
+
+                def inner(x2, ii):
+                    lp, sl = ii
+                    x2, new = self._mamba_decode(lp, x2, sl)
+                    return x2, new
+
+                x, new_ssm = lax.scan(inner, x, (glp, gssm))
+                h_in = rms_norm(params["shared_attn"]["ln1"], x, c.norm_eps)
+                a, new_kv = self._attn_decode(params["shared_attn"]["attn"],
+                                              h_in, kv_slice, pos)
+                x = x + a
+                x = x + swiglu(params["shared_attn"]["mlp"],
+                               rms_norm(params["shared_attn"]["ln2"], x,
+                                        c.norm_eps))
+                return x, (new_ssm, new_kv)
+
+            x, (new_ssm, new_kv) = lax.scan(
+                group_step, x, (stacked, ssm_stacked, cache["kv"]))
+            new_cache = {
+                "ssm": jax.tree.map(
+                    lambda a: a.reshape(groups * period, *a.shape[2:]), new_ssm),
+                "kv": new_kv,
+            }
+            if "ssm_tail" in cache:
+                def inner(x2, ii):
+                    lp, sl = ii
+                    x2, new = self._mamba_decode(lp, x2, sl)
+                    return x2, new
+
+                x, new_tail = lax.scan(inner, x,
+                                       (params["tail_layers"], cache["ssm_tail"]))
+                new_cache["ssm_tail"] = new_tail
+            cache = new_cache
+        elif c.family == "encdec":
+            def step(x, inp):
+                lp, kv_slice, cross_k, cross_v = inp
+                a, new_kv = self._attn_decode(
+                    lp["attn"], rms_norm(lp["ln1"], x, c.norm_eps),
+                    kv_slice, pos)
+                hh = x + a
+                hh = hh + attn.cross_attention(
+                    lp["xattn"], rms_norm(lp["ln_x"], hh, c.norm_eps),
+                    (cross_k, cross_v),
+                    num_heads=c.num_heads, head_dim=c.head_dim)
+                hh = hh + swiglu(lp["mlp"], rms_norm(lp["ln2"], hh, c.norm_eps))
+                return hh, new_kv
+
+            x, new_kv = lax.scan(
+                step, x,
+                (params["layers"], cache["kv"], cache["cross"]["k"],
+                 cache["cross"]["v"]))
+            cache = {"kv": new_kv, "cross": cache["cross"]}
+        else:
+            raise ValueError(c.family)
+
+        logits = self._logits(params, x)[:, 0, :]
+        return logits, cache

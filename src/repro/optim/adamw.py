@@ -1,0 +1,96 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a cosine LR
+schedule. Pure pytree functions: optimizer state shards exactly like params
+(ZeRO — the moments inherit the params' NamedShardings)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment, params-shaped
+    nu: Any  # second moment, params-shaped
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+_DECAY_EXEMPT = ("scale", "dt_bias", "A_log", "D", "norm_scale")
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics). `lr` is a schedule fn or a
+    float."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        update = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        name = str(path[-1])
+        if weight_decay > 0 and p.ndim >= 2 and not any(
+            t in name for t in _DECAY_EXEMPT
+        ):
+            update = update + weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr_t * update).astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+
+    tree = jax.tree.structure(params)
+    return (
+        jax.tree.unflatten(tree, new_p),
+        AdamWState(step, jax.tree.unflatten(tree, new_mu),
+                   jax.tree.unflatten(tree, new_nu)),
+        {"grad_norm": gnorm, "lr": lr_t},
+    )

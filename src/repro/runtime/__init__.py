@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    ElasticMeshPlanner,
+    FaultToleranceManager,
+    StragglerMonitor,
+)
+
+__all__ = ["ElasticMeshPlanner", "FaultToleranceManager", "StragglerMonitor"]

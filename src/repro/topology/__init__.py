@@ -1,0 +1,30 @@
+from repro.topology.topology import Link, Node, NodeType, Topology
+from repro.topology.generators import (
+    ring,
+    line,
+    mesh2d,
+    torus2d,
+    torus3d,
+    hypercube,
+    star_switch,
+    two_level_switch,
+    tpu_v5e_pod,
+    multi_pod,
+)
+
+__all__ = [
+    "Link",
+    "Node",
+    "NodeType",
+    "Topology",
+    "ring",
+    "line",
+    "mesh2d",
+    "torus2d",
+    "torus3d",
+    "hypercube",
+    "star_switch",
+    "two_level_switch",
+    "tpu_v5e_pod",
+    "multi_pod",
+]

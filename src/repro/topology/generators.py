@@ -1,0 +1,188 @@
+"""Standard topology generators used in the paper's evaluation and ours.
+
+All generators return NPU-dense topologies (NPU ids 0..n-1 first, switch ids
+after) so process groups can be specified directly as NPU-id lists.
+
+Unless stated otherwise links are bidirectional (one directed link each way)
+and homogeneous with (alpha, beta) given by the caller. The paper's
+homogeneous experiments use unit link time: alpha=0, beta=1 with chunk
+bytes=1 -> 1 us per hop per chunk.
+"""
+
+from __future__ import annotations
+
+from repro.topology.topology import NodeType, Topology
+
+
+def ring(n: int, alpha: float = 0.0, beta: float = 1.0, bidirectional: bool = False) -> Topology:
+    """Unidirectional (default) or bidirectional ring of n NPUs (paper Fig. 4a)."""
+    topo = Topology(f"ring{n}{'_bidir' if bidirectional else ''}")
+    topo.add_npus(n)
+    for i in range(n):
+        topo.add_link(i, (i + 1) % n, alpha, beta)
+        if bidirectional:
+            topo.add_link((i + 1) % n, i, alpha, beta)
+    return topo
+
+
+def line(n: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    """Bidirectional line (path) of n NPUs."""
+    topo = Topology(f"line{n}")
+    topo.add_npus(n)
+    for i in range(n - 1):
+        topo.add_bidir_link(i, i + 1, alpha, beta)
+    return topo
+
+
+def mesh2d(rows: int, cols: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    """Bidirectional 2D mesh (no wraparound) — the paper's main scalability target."""
+    topo = Topology(f"mesh2d_{rows}x{cols}")
+    topo.add_npus(rows * cols)
+    idx = lambda r, c: r * cols + c
+    for r in range(rows):
+        for c in range(cols):
+            if c + 1 < cols:
+                topo.add_bidir_link(idx(r, c), idx(r, c + 1), alpha, beta)
+            if r + 1 < rows:
+                topo.add_bidir_link(idx(r, c), idx(r + 1, c), alpha, beta)
+    return topo
+
+
+def torus2d(rows: int, cols: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    """Bidirectional 2D torus (mesh + wraparound), the TPU pod abstraction."""
+    topo = Topology(f"torus2d_{rows}x{cols}")
+    topo.add_npus(rows * cols)
+    idx = lambda r, c: r * cols + c
+    for r in range(rows):
+        for c in range(cols):
+            topo.add_bidir_link(idx(r, c), idx(r, (c + 1) % cols), alpha, beta)
+            topo.add_bidir_link(idx(r, c), idx((r + 1) % rows, c), alpha, beta)
+    return topo
+
+
+def torus3d(x: int, y: int, z: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    topo = Topology(f"torus3d_{x}x{y}x{z}")
+    topo.add_npus(x * y * z)
+    idx = lambda i, j, k: (i * y + j) * z + k
+    for i in range(x):
+        for j in range(y):
+            for k in range(z):
+                topo.add_bidir_link(idx(i, j, k), idx((i + 1) % x, j, k), alpha, beta)
+                topo.add_bidir_link(idx(i, j, k), idx(i, (j + 1) % y, k), alpha, beta)
+                topo.add_bidir_link(idx(i, j, k), idx(i, j, (k + 1) % z), alpha, beta)
+    return topo
+
+
+def hypercube(dims: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    """dims-dimensional binary hypercube: 2**dims NPUs; paper uses '3D Hypercube'
+    meaning the generalization with side>2 — see :func:`grid_hypercube`."""
+    n = 1 << dims
+    topo = Topology(f"hypercube{dims}d")
+    topo.add_npus(n)
+    for i in range(n):
+        for b in range(dims):
+            j = i ^ (1 << b)
+            if j > i:
+                topo.add_bidir_link(i, j, alpha, beta)
+    return topo
+
+
+def grid_hypercube(side: int, dims: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
+    """'3D Hypercube' in the paper's sense = dims-dimensional torus with equal
+    sides (side**dims NPUs). dims=3 gives the paper's 3D Hypercube."""
+    if dims == 3:
+        t = torus3d(side, side, side, alpha, beta)
+        t.name = f"hypercube3d_{side}"
+        return t
+    if dims == 2:
+        t = torus2d(side, side, alpha, beta)
+        t.name = f"hypercube2d_{side}"
+        return t
+    raise ValueError(f"unsupported dims={dims}")
+
+
+def star_switch(
+    n: int,
+    alpha: float = 0.0,
+    beta: float = 1.0,
+    buffer_limit: int | None = None,
+    multicast: bool = True,
+) -> Topology:
+    """n NPUs hanging off one switch (explicit switch node, paper §4.7)."""
+    topo = Topology(f"star_switch{n}")
+    topo.add_npus(n)
+    sw = topo.add_node(NodeType.SWITCH, buffer_limit=buffer_limit, multicast=multicast)
+    for i in range(n):
+        topo.add_bidir_link(i, sw, alpha, beta)
+    return topo
+
+
+def two_level_switch(
+    num_nodes: int,
+    npus_per_node: int = 8,
+    local_alpha: float = 0.5,
+    local_beta: float = 1.0 / 400.0,  # ~400 GB/s scale-up per us-per-KiB scaling
+    spine_alpha: float = 2.0,
+    spine_beta: float = 1.0 / 50.0,  # ~50 GB/s scale-out
+    buffer_limit: int | None = None,
+    multicast: bool = True,
+) -> Topology:
+    """Heterogeneous 2D switch topology of paper Fig. 13: nodes of 8 NPUs with
+    a fast local switch, node switches joined by a slower spine switch."""
+    topo = Topology(f"switch2d_{num_nodes}x{npus_per_node}")
+    topo.add_npus(num_nodes * npus_per_node)
+    local = [
+        topo.add_node(NodeType.SWITCH, buffer_limit=buffer_limit, multicast=multicast)
+        for _ in range(num_nodes)
+    ]
+    spine = topo.add_node(NodeType.SWITCH, buffer_limit=buffer_limit, multicast=multicast)
+    for node in range(num_nodes):
+        for j in range(npus_per_node):
+            topo.add_bidir_link(node * npus_per_node + j, local[node], local_alpha, local_beta)
+        topo.add_bidir_link(local[node], spine, spine_alpha, spine_beta)
+    return topo
+
+
+def tpu_v5e_pod(rows: int = 16, cols: int = 16, link_gbps: float = 50.0) -> Topology:
+    """One TPU-v5e-like pod: 2D torus with ~50 GB/s/direction ICI links.
+
+    beta is expressed in us per MiB so synthesized schedule times are in us
+    for MiB-sized chunks: 1 MiB / (50 GB/s) = ~20 us/MiB.
+    """
+    beta_us_per_mib = (1.0 / (link_gbps * 1e9)) * (1 << 20) * 1e6
+    t = torus2d(rows, cols, alpha=1.0, beta=beta_us_per_mib)
+    t.name = f"tpu_v5e_pod_{rows}x{cols}"
+    return t
+
+
+def multi_pod(
+    num_pods: int = 2,
+    rows: int = 16,
+    cols: int = 16,
+    link_gbps: float = 50.0,
+    dci_gbps: float = 25.0,
+    dci_alpha: float = 10.0,
+    dci_ports_per_pod: int = 16,
+) -> Topology:
+    """num_pods TPU pods; pod edge devices uplink to a DCI switch.
+
+    NPU ids: pod p occupies [p*rows*cols, (p+1)*rows*cols). A single switch
+    models the inter-pod fabric; each pod contributes `dci_ports_per_pod`
+    uplinks from its first row (the 'edge' row).
+    """
+    beta_ici = (1.0 / (link_gbps * 1e9)) * (1 << 20) * 1e6
+    beta_dci = (1.0 / (dci_gbps * 1e9)) * (1 << 20) * 1e6
+    topo = Topology(f"multi_pod_{num_pods}x{rows}x{cols}")
+    per_pod = rows * cols
+    topo.add_npus(num_pods * per_pod)
+    idx = lambda p, r, c: p * per_pod + r * cols + c
+    for p in range(num_pods):
+        for r in range(rows):
+            for c in range(cols):
+                topo.add_bidir_link(idx(p, r, c), idx(p, r, (c + 1) % cols), 1.0, beta_ici)
+                topo.add_bidir_link(idx(p, r, c), idx(p, (r + 1) % rows, c), 1.0, beta_ici)
+    dci = topo.add_node(NodeType.SWITCH, buffer_limit=None, multicast=True)
+    for p in range(num_pods):
+        for c in range(min(dci_ports_per_pod, cols)):
+            topo.add_bidir_link(idx(p, 0, c), dci, dci_alpha, beta_dci)
+    return topo

@@ -1,0 +1,157 @@
+"""Physical network topology model.
+
+A topology is a directed multigraph over *devices*. Devices are either NPUs
+(compute endpoints that may source/sink collective chunks) or switches
+(forwarding-only devices with optional buffer limits and multicast support,
+paper §4.7). Every directed link carries its own alpha (latency, us) and
+beta (1/bandwidth, us per byte) — the alpha-beta model of paper §4.6 — so
+heterogeneous and asymmetric networks are first-class.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class NodeType(enum.Enum):
+    NPU = "npu"
+    SWITCH = "switch"
+
+
+@dataclass(frozen=True)
+class Node:
+    """A device in the network."""
+
+    id: int
+    type: NodeType = NodeType.NPU
+    # Switch-only attributes (ignored for NPUs):
+    buffer_limit: int | None = None  # max chunks resident at once (None = inf)
+    multicast: bool = True  # can forward one incoming chunk on >1 link per step
+
+
+@dataclass(frozen=True)
+class Link:
+    """A directed physical link src -> dst with alpha-beta timing."""
+
+    id: int
+    src: int
+    dst: int
+    alpha: float = 0.0  # latency in us
+    beta: float = 1.0  # us per byte (1/bandwidth)
+
+    def transfer_time(self, chunk_bytes: float) -> float:
+        """alpha + m * beta (paper Fig. 9)."""
+        return self.alpha + chunk_bytes * self.beta
+
+
+class Topology:
+    """Directed multigraph with O(1) adjacency lookups.
+
+    Node ids must be dense integers starting at 0 (NPUs and switches share
+    one id space). Link ids are assigned densely in insertion order.
+    """
+
+    def __init__(self, name: str = "topology"):
+        self.name = name
+        self.nodes: list[Node] = []
+        self.links: list[Link] = []
+        self._out: list[list[Link]] = []  # node id -> outgoing links
+        self._in: list[list[Link]] = []  # node id -> incoming links
+
+    # -- construction ------------------------------------------------------
+    def add_node(
+        self,
+        type: NodeType = NodeType.NPU,
+        buffer_limit: int | None = None,
+        multicast: bool = True,
+    ) -> int:
+        nid = len(self.nodes)
+        self.nodes.append(Node(nid, type, buffer_limit, multicast))
+        self._out.append([])
+        self._in.append([])
+        return nid
+
+    def add_npus(self, n: int) -> list[int]:
+        return [self.add_node(NodeType.NPU) for _ in range(n)]
+
+    def add_link(
+        self, src: int, dst: int, alpha: float = 0.0, beta: float = 1.0
+    ) -> int:
+        if src == dst:
+            raise ValueError(f"self-link on node {src}")
+        link = Link(len(self.links), src, dst, alpha, beta)
+        self.links.append(link)
+        self._out[src].append(link)
+        self._in[dst].append(link)
+        return link.id
+
+    def add_bidir_link(
+        self, a: int, b: int, alpha: float = 0.0, beta: float = 1.0
+    ) -> tuple[int, int]:
+        return self.add_link(a, b, alpha, beta), self.add_link(b, a, alpha, beta)
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def num_links(self) -> int:
+        return len(self.links)
+
+    @property
+    def npus(self) -> list[int]:
+        return [n.id for n in self.nodes if n.type is NodeType.NPU]
+
+    @property
+    def switches(self) -> list[int]:
+        return [n.id for n in self.nodes if n.type is NodeType.SWITCH]
+
+    def out_links(self, node: int) -> list[Link]:
+        return self._out[node]
+
+    def in_links(self, node: int) -> list[Link]:
+        return self._in[node]
+
+    def is_switch(self, node: int) -> bool:
+        return self.nodes[node].type is NodeType.SWITCH
+
+    def homogeneous(self) -> bool:
+        """True iff every link has identical (alpha, beta)."""
+        if not self.links:
+            return True
+        a0, b0 = self.links[0].alpha, self.links[0].beta
+        return all(l.alpha == a0 and l.beta == b0 for l in self.links)
+
+    # -- distances ---------------------------------------------------------
+    def hop_distances_from(self, src: int) -> list[int]:
+        """Unweighted BFS hop distance from src to all nodes (-1 = unreachable)."""
+        dist = [-1] * self.num_nodes
+        dist[src] = 0
+        frontier = [src]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for link in self._out[u]:
+                    if dist[link.dst] < 0:
+                        dist[link.dst] = dist[u] + 1
+                        nxt.append(link.dst)
+            frontier = nxt
+        return dist
+
+    def reversed(self) -> "Topology":
+        """A copy with every link direction flipped (used for reduction synthesis)."""
+        rev = Topology(self.name + "_rev")
+        for node in self.nodes:
+            rev.add_node(node.type, node.buffer_limit, node.multicast)
+        for link in self.links:
+            rev.add_link(link.dst, link.src, link.alpha, link.beta)
+        return rev
+
+    def __repr__(self) -> str:
+        return (
+            f"Topology({self.name!r}, nodes={self.num_nodes} "
+            f"(npus={len(self.npus)}, switches={len(self.switches)}), "
+            f"links={self.num_links})"
+        )
