@@ -27,6 +27,7 @@ def main() -> None:
         hetero_switch,
         pg_sensitivity,
         process_group,
+        registry_amortization,
         roofline,
         synthesis_chunks,
         synthesis_scale,
@@ -41,6 +42,7 @@ def main() -> None:
         ("fig16", process_group),
         ("fig18", utilization),
         ("fig19", pg_sensitivity),
+        ("registry", registry_amortization),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

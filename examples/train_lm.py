@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
+from repro.jaxcompat import make_mesh
 from repro.configs import get_config
 from repro.data.pipeline import DataPipeline
 from repro.launch.sharding import ShardingPolicy
@@ -48,8 +49,7 @@ def main():
     cfg = get_config("llama3.2-1b").reduced(**MODELS[args.model])
     print(f"model: {cfg.name} reduced -> {cfg.param_count()/1e6:.1f}M params")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     policy = ShardingPolicy(mesh, cfg)
     lm = LM(cfg, policy=policy, remat=True)
 

@@ -1,4 +1,11 @@
-from repro.comms.executor import BufferPlan, execute_program, plan_buffers
+from repro.comms.executor import (
+    BufferPlan,
+    clear_plan_cache,
+    execute_program,
+    plan_buffers,
+    plan_buffers_cached,
+    plan_cache_stats,
+)
 from repro.comms.primitives import (
     CollectiveSpec,
     pccl_all_gather,
@@ -17,8 +24,11 @@ from repro.comms.compression import (
 
 __all__ = [
     "BufferPlan",
+    "clear_plan_cache",
     "execute_program",
     "plan_buffers",
+    "plan_buffers_cached",
+    "plan_cache_stats",
     "CollectiveSpec",
     "pccl_all_gather",
     "pccl_all_reduce",

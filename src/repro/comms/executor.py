@@ -15,6 +15,7 @@ inside the traced program use per-device constant tables indexed by
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -41,10 +42,31 @@ class BufferPlan:
     num_slots: int  # data slots; slot num_slots is the trash slot
     slot_of: dict[tuple[int, int], int]  # (device, chunk) -> slot
     rounds: list[RoundTables] = field(default_factory=list)
+    # lazily-built stacked [num_rounds, num_devices] device arrays, shared by
+    # every trace of this plan (see round_tables)
+    _tables: tuple | None = field(default=None, repr=False, compare=False)
 
     @property
     def buffer_slots(self) -> int:
         return self.num_slots + 1  # + trash
+
+    def round_tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """(send_slot, recv_slot, is_reduce) stacked over rounds, built once
+        per plan so re-executing a cached plan embeds one constant per table
+        instead of re-materializing per-round arrays on every trace."""
+        if self._tables is None:
+            n = self.num_devices
+            if self.rounds:
+                send = np.stack([rt.send_slot for rt in self.rounds])
+                recv = np.stack([rt.recv_slot for rt in self.rounds])
+                red = np.stack([rt.is_reduce for rt in self.rounds])
+            else:
+                send = np.zeros((0, n), np.int32)
+                recv = np.zeros((0, n), np.int32)
+                red = np.zeros((0, n), bool)
+            self._tables = (jnp.asarray(send), jnp.asarray(recv),
+                            jnp.asarray(red))
+        return self._tables
 
 
 def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
@@ -91,6 +113,39 @@ def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
     return plan
 
 
+# ---------------------------------------------------------------------------
+# Plan cache: fingerprint -> BufferPlan. Repeated identical collectives (same
+# synthesized program, e.g. the all-reduce issued every training step, or the
+# same registry-canonical collective re-requested after a retrace) skip
+# plan_buffers entirely and share the plan's jitted round tables.
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: OrderedDict[object, BufferPlan] = OrderedDict()
+_PLAN_CACHE_MAX = 128
+plan_cache_stats = {"hits": 0, "misses": 0}
+
+
+def plan_buffers_cached(prog: PpermuteProgram, fingerprint: object) -> BufferPlan:
+    """``plan_buffers`` behind an LRU keyed by the caller's fingerprint (the
+    registry fingerprint plus device mapping is the natural key)."""
+    plan = _PLAN_CACHE.get(fingerprint)
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(fingerprint)
+        plan_cache_stats["hits"] += 1
+        return plan
+    plan = plan_buffers(prog)
+    plan_cache_stats["misses"] += 1
+    _PLAN_CACHE[fingerprint] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    plan_cache_stats.update(hits=0, misses=0)
+
+
 def execute_program(
     plan: BufferPlan,
     buf: jax.Array,
@@ -100,10 +155,11 @@ def execute_program(
     buffer with source chunks pre-placed at their planned slots. Returns the
     final buffer; callers extract destination slots via `plan.slot_of`."""
     idx = lax.axis_index(axis_name)
-    for rt in plan.rounds:
-        send_slot = jnp.asarray(rt.send_slot)[idx]
-        recv_slot = jnp.asarray(rt.recv_slot)[idx]
-        reduce_here = jnp.asarray(rt.is_reduce)[idx]
+    send_t, recv_t, reduce_t = plan.round_tables()
+    for r, rt in enumerate(plan.rounds):
+        send_slot = send_t[r, idx]
+        recv_slot = recv_t[r, idx]
+        reduce_here = reduce_t[r, idx]
         val = lax.dynamic_index_in_dim(buf, send_slot, axis=0, keepdims=False)
         got = lax.ppermute(val, axis_name, rt.perm)
         old = lax.dynamic_index_in_dim(buf, recv_slot, axis=0, keepdims=False)

@@ -12,7 +12,7 @@ program embeds the static permute rounds.
 
 from __future__ import annotations
 
-import functools
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
@@ -21,9 +21,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.comms.executor import BufferPlan, execute_program, gather_slots, plan_buffers
-from repro.core import synthesizer as syn
-from repro.core.conditions import ChunkIds
+from repro.comms.executor import (
+    BufferPlan,
+    execute_program,
+    gather_slots,
+    plan_buffers_cached,
+)
+from repro.core.engine import SynthesisEngine
+from repro.core.registry import default_registry, topology_fingerprint
 from repro.core.translate import PpermuteProgram, to_ppermute_program
 from repro.topology.topology import Topology
 
@@ -39,7 +44,29 @@ class CollectiveSpec:
     group: tuple[int, ...]  # NPU ids of the process group, in axis order
 
 
-_PROGRAM_CACHE: dict = {}
+# translated programs, keyed by fingerprint (bounded LRU; BufferPlans are
+# owned by the executor's plan cache, not pinned here)
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_MAX = 128
+
+
+def _engine_for(topo: Topology, registry) -> SynthesisEngine:
+    """One engine per (topology, registry), attached to the topology object
+    so distance caches persist across collectives, the whole bundle is
+    garbage-collected with the topology (a topo<->engine cycle, not an
+    immortal module-level dict), and graph mutation invalidates it."""
+    engines = getattr(topo, "_pccl_engines", None)
+    if engines is None:
+        engines = topo._pccl_engines = OrderedDict()
+    eng = engines.get(id(registry))
+    if eng is None:
+        # NB: id(registry) stays valid while the entry exists because the
+        # engine references the registry strongly.
+        eng = SynthesisEngine(topo, registry=registry)
+        engines[id(registry)] = eng
+        while len(engines) > 8:
+            engines.popitem(last=False)
+    return eng
 
 
 def synthesize_program(
@@ -49,29 +76,40 @@ def synthesize_program(
     nbytes: float = 1.0,
     device_of_npu: dict[int, int] | None = None,
     pipelined_ar: bool = True,
+    registry=None,
 ) -> tuple[PpermuteProgram, BufferPlan]:
-    key = (topo.name, topo.num_links, spec, nbytes, pipelined_ar,
-           None if device_of_npu is None else tuple(sorted(device_of_npu.items())))
-    hit = _PROGRAM_CACHE.get(key)
-    if hit is not None:
-        return hit
-    group = list(spec.group)
-    if spec.kind == "all_gather":
-        alg = syn.synthesize_all_gather(topo, group, bytes=nbytes)
-    elif spec.kind == "all_to_all":
-        alg = syn.synthesize_all_to_all(topo, group, bytes=nbytes)
-    elif spec.kind == "reduce_scatter":
-        alg = syn.synthesize_reduce_scatter(topo, group, bytes=nbytes)
-    elif spec.kind == "all_reduce":
-        alg = syn.synthesize_all_reduce(topo, group, bytes=nbytes,
-                                        pipelined=pipelined_ar)
+    """Synthesis -> translation -> buffer planning, cached at every layer:
+    the algorithm through the (shared) AlgorithmRegistry — so isomorphic
+    process groups reuse one synthesized plan — the translated program here,
+    and the BufferPlan through the executor's plan cache (the single owner
+    of plans; every call goes through it, so its stats reflect real reuse)."""
+    registry = registry if registry is not None else default_registry()
+    dev_key = (None if device_of_npu is None
+               else tuple(sorted(device_of_npu.items())))
+    key = (topology_fingerprint(topo), spec, nbytes, pipelined_ar, dev_key)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is not None:
+        _PROGRAM_CACHE.move_to_end(key)
     else:
-        raise ValueError(f"unknown collective kind {spec.kind!r}")
-    alg.validate()
-    prog = to_ppermute_program(alg, device_of_npu)
-    plan = plan_buffers(prog)
-    _PROGRAM_CACHE[key] = (prog, plan)
-    return prog, plan
+        engine = _engine_for(topo, registry)
+        group = list(spec.group)
+        if spec.kind == "all_gather":
+            alg = engine.all_gather(group, bytes=nbytes)
+        elif spec.kind == "all_to_all":
+            alg = engine.all_to_all(group, bytes=nbytes)
+        elif spec.kind == "reduce_scatter":
+            alg = engine.reduce_scatter(group, bytes=nbytes)
+        elif spec.kind == "all_reduce":
+            alg = engine.all_reduce(group, bytes=nbytes,
+                                    pipelined=pipelined_ar)
+        else:
+            raise ValueError(f"unknown collective kind {spec.kind!r}")
+        alg.validate()
+        prog = to_ppermute_program(alg, device_of_npu)
+        _PROGRAM_CACHE[key] = prog
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.popitem(last=False)
+    return prog, plan_buffers_cached(prog, key)
 
 
 def _group_devices(prog: PpermuteProgram, spec: CollectiveSpec,

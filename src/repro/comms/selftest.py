@@ -23,11 +23,12 @@ from repro.comms.primitives import (  # noqa: E402
     pccl_all_to_all,
     pccl_reduce_scatter,
 )
+from repro.jaxcompat import make_mesh, shard_map  # noqa: E402
 from repro.topology import line, ring, torus2d  # noqa: E402
 
 
 def _mesh1d(n=8):
-    return jax.make_mesh((n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("x",))
 
 
 def check(name, got, want, atol=1e-6):
@@ -47,7 +48,7 @@ def test_all_gather_ring():
         def f(xl):
             return pccl_all_gather(xl[0], "x", topo, spec)
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
+        return shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
 
     got = run(x)  # [8 devices, 8 chunks, 4] -> every device row == full x
     want = jnp.broadcast_to(x, (8, 8, 4)).reshape(8 * 8, 4)
@@ -68,7 +69,7 @@ def test_all_gather_subgroup_with_forwarding():
         def f(xl):
             return pccl_all_gather(xl[0], "x", topo, spec)
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
+        return shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
 
     got = np.asarray(run(x)).reshape(8, 3, 2)
     want = np.asarray(x)[list(group)]
@@ -89,7 +90,7 @@ def test_all_reduce():
             ref = lax.psum(xl[0], "x")
             return mine[None], ref[None]
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"),
+        return shard_map(f, mesh=mesh, in_specs=P("x"),
                              out_specs=(P("x"), P("x")))(x)
 
     mine, ref = run(x)
@@ -109,7 +110,7 @@ def test_reduce_scatter():
             ref = lax.psum_scatter(xl[0], "x", scatter_dimension=0, tiled=False)
             return mine[None], ref[None]
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"),
+        return shard_map(f, mesh=mesh, in_specs=P("x"),
                              out_specs=(P("x"), P("x")))(x)
 
     mine, ref = run(x)
@@ -131,7 +132,7 @@ def test_all_to_all_torus_rows():
                                  concat_axis=0)[:, 0]
             return mine[None], ref[None]
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"),
+        return shard_map(f, mesh=mesh, in_specs=P("x"),
                              out_specs=(P("x"), P("x")))(x)
 
     mine, ref = run(x)
@@ -151,7 +152,7 @@ def test_all_to_all_subgroup():
         def f(xl):
             return pccl_all_to_all(xl[0], "x", topo, spec)[None]
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
+        return shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x)
 
     got = np.asarray(run(x))
     xs = np.asarray(x)
@@ -163,8 +164,7 @@ def test_all_to_all_subgroup():
 
 def test_two_axis_flattened():
     """Executor over a flattened ('r','c') mesh — the full-pod execution mode."""
-    mesh = jax.make_mesh((2, 4), ("r", "c"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("r", "c"))
     topo = torus2d(2, 4)
     spec = CollectiveSpec("all_gather", tuple(range(8)))
     x = jnp.arange(8 * 2, dtype=jnp.float32).reshape(8, 2)
@@ -174,7 +174,7 @@ def test_two_axis_flattened():
         def f(xl):
             return pccl_all_gather(xl[0], ("r", "c"), topo, spec)[None]
 
-        return jax.shard_map(f, mesh=mesh, in_specs=P(("r", "c")),
+        return shard_map(f, mesh=mesh, in_specs=P(("r", "c")),
                              out_specs=P(("r", "c")))(x)
 
     got = np.asarray(run(x)).reshape(8, 8, 2)

@@ -1,0 +1,377 @@
+"""SynthesisEngine: the single owner of the PCCL synthesis loop.
+
+Historically every ``synthesize*`` front-end in :mod:`repro.core.synthesizer`
+re-implemented the same lifecycle: build a TEN, pick int/cont mode, order
+conditions, run BFS per condition, commit the pruned paths. The engine owns
+that lifecycle in one place (paper §4.4, Algorithm 3) and adds two things the
+front-ends could not:
+
+* a per-topology distance cache shared across calls (condition ordering no
+  longer recomputes shortest paths for every collective on the same fabric);
+* an optional :class:`repro.core.registry.AlgorithmRegistry` hook — named
+  collectives (all_gather, all_to_all, reductions) are fetched through the
+  registry so isomorphic process groups reuse one synthesized, canonicalized
+  plan instead of redoing the TEN/BFS work.
+
+The ``synthesize*`` functions in ``synthesizer.py`` remain as thin wrappers
+for backward compatibility; new code should hold a ``SynthesisEngine``.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import replace
+from typing import Callable, Sequence
+
+from repro.core import conditions as cnd
+from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import ChunkIds, Condition, ReduceCondition
+from repro.core.pathfinding import PathResult, bfs_cont, bfs_int
+from repro.core.registry import renumber_chunks
+from repro.core.ten import TEN
+from repro.topology.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# Distances for condition ordering (Algorithm 3, lines 1-7)
+# ---------------------------------------------------------------------------
+
+class _DistanceCache:
+    """Per-source shortest-path times on the static topology, cached.
+
+    Homogeneous graphs use hop counts; heterogeneous use alpha-beta link
+    times for the given chunk size (Dijkstra).
+    """
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.homog = topo.homogeneous()
+        self._cache: dict = {}
+
+    def dist(self, src: int, chunk_bytes: float) -> list[float]:
+        key = (src, None if self.homog else chunk_bytes)
+        got = self._cache.get(key)
+        if got is not None:
+            return got
+        topo = self.topo
+        if self.homog:
+            d = [float(x) for x in topo.hop_distances_from(src)]
+            d = [x if x >= 0 else float("inf") for x in d]
+        else:
+            d = [float("inf")] * topo.num_nodes
+            d[src] = 0.0
+            heap = [(0.0, src)]
+            while heap:
+                du, u = heapq.heappop(heap)
+                if du > d[u]:
+                    continue
+                for link in topo.out_links(u):
+                    alt = du + link.transfer_time(chunk_bytes)
+                    if alt < d[link.dst]:
+                        d[link.dst] = alt
+                        heapq.heappush(heap, (alt, link.dst))
+        self._cache[key] = d
+        return d
+
+    def condition_dist(self, c: Condition) -> float:
+        d = self.dist(c.src, c.bytes)
+        return max((d[dst] for dst in c.remote_dests), default=0.0)
+
+
+def order_conditions(topo: Topology, conds: list[Condition]) -> list[Condition]:
+    """Sort descending by max shortest-path distance (Algorithm 3 line 7);
+    deterministic tie-break on (bytes, chunk id)."""
+    return SynthesisEngine(topo).order_conditions(conds)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class SynthesisEngine:
+    """Owns TEN lifecycle, mode selection, condition ordering, and commit.
+
+    One engine per physical topology; cheap to construct, cheaper to reuse
+    (the distance cache and the reversed-topology view persist across calls).
+    Pass a ``registry`` to share synthesized plans across isomorphic process
+    groups and across engines.
+    """
+
+    def __init__(self, topology: Topology, *, registry=None):
+        self.topology = topology
+        self.registry = registry
+        self._distances = _DistanceCache(topology)
+        self._rev_topo: Topology | None = None
+
+    # -- lifecycle pieces ---------------------------------------------------
+
+    def order_conditions(self, conds: list[Condition]) -> list[Condition]:
+        cache = self._distances
+        return sorted(
+            conds, key=lambda c: (-cache.condition_dist(c), -c.bytes, c.chunk)
+        )
+
+    def _use_int_mode(self, conds: list[Condition]) -> bool:
+        topo = self.topology
+        if not topo.homogeneous() or not conds:
+            return False
+        b0 = conds[0].bytes
+        if any(c.bytes != b0 for c in conds):
+            return False
+        if any(c.release != int(c.release) for c in conds):
+            return False
+        # unit transfer time required for the integer TEN
+        link = topo.links[0] if topo.links else None
+        return link is None or link.transfer_time(b0) == 1.0
+
+    def _commit(self, ten: TEN, result: PathResult, int_mode: bool) -> None:
+        # occupy links of retained paths only (paper Fig. 6e / Fig. 7)
+        topo = ten.topology
+        last_send_end: dict[int, float] = {}
+        for t in result.transfers:
+            if int_mode:
+                ten.commit_int(t.link, int(t.start))
+            else:
+                ten.commit(t.link, t.start, t.end)
+            if topo.is_switch(t.src):
+                last_send_end[t.src] = max(last_send_end.get(t.src, 0.0), t.end)
+        # switch residency: arrival .. last retained forward
+        for t in result.transfers:
+            if topo.is_switch(t.dst):
+                ten.commit_residency(
+                    t.dst, t.end, max(last_send_end.get(t.dst, t.end), t.end)
+                )
+
+    def reversed_topology(self) -> Topology:
+        """The link-reversed view used for reduction synthesis, built once."""
+        if self._rev_topo is None:
+            self._rev_topo = self.topology.reversed()
+        return self._rev_topo
+
+    # -- Algorithm 3 --------------------------------------------------------
+
+    def synthesize(
+        self,
+        conds: list[Condition],
+        *,
+        preload: CollectiveAlgorithm | None = None,
+        mode: str = "auto",
+        name: str = "pccl",
+        topology: Topology | None = None,
+    ) -> CollectiveAlgorithm:
+        """Paper Algorithm 3 over a fresh TEN. ``preload``'s transfers are
+        committed first (used to compose All-Reduce phases without link
+        conflicts). ``topology`` overrides the engine's topology for internal
+        reversed-topology passes."""
+        topo = topology or self.topology
+        ten = TEN(topo)
+        int_mode = mode == "int" or (mode == "auto" and self._use_int_mode(conds))
+        if preload is not None:
+            for t in preload.transfers:
+                if int_mode:
+                    ten.commit_int(t.link, int(t.start))
+                else:
+                    ten.commit(t.link, t.start, t.end)
+
+        if topo is self.topology:
+            ordered = self.order_conditions(conds)
+        else:
+            cache = _DistanceCache(topo)
+            ordered = sorted(
+                conds, key=lambda c: (-cache.condition_dist(c), -c.bytes, c.chunk)
+            )
+        transfers: list[Transfer] = []
+        for c in ordered:
+            result: PathResult = bfs_int(ten, c) if int_mode else bfs_cont(ten, c)
+            self._commit(ten, result, int_mode)
+            transfers.extend(result.transfers)
+        return CollectiveAlgorithm(topo, list(conds), transfers, name=name)
+
+    def synthesize_joint(
+        self,
+        groups: list[tuple[str, list[Condition]]],
+        *,
+        name: str = "pccl_joint",
+    ) -> CollectiveAlgorithm:
+        """Jointly synthesize several process groups' collectives over one
+        shared TEN (paper §6.4, Fig. 15). Chunk ids across groups must be
+        unique — use a shared ChunkIds allocator."""
+        all_conds: list[Condition] = []
+        for tag, conds in groups:
+            all_conds.extend(replace(c, tag=tag) for c in conds)
+        seen: set[int] = set()
+        for c in all_conds:
+            if c.chunk in seen:
+                raise ValueError(
+                    f"duplicate chunk id {c.chunk} across process groups"
+                )
+            seen.add(c.chunk)
+        return self.synthesize(all_conds, name=name)
+
+    # -- registry routing ---------------------------------------------------
+
+    def _routed(
+        self,
+        kind: str,
+        group: Sequence[int],
+        synth: Callable[[list[int]], CollectiveAlgorithm],
+        *,
+        params: tuple,
+        ids: ChunkIds | None,
+    ) -> CollectiveAlgorithm:
+        """Fetch a named collective through the registry when one is attached;
+        otherwise synthesize directly on the literal group."""
+        group = list(group)
+        if self.registry is None:
+            return renumber_chunks(synth(group), ids)
+        return self.registry.get_or_synthesize(
+            self.topology, kind, group, synth, params=params, ids=ids
+        )
+
+    # -- named collectives --------------------------------------------------
+
+    def all_gather(
+        self, group: Sequence[int], *, bytes: float = 1.0,
+        chunks_per_npu: int = 1, ids: ChunkIds | None = None,
+    ) -> CollectiveAlgorithm:
+        def synth(g: list[int]) -> CollectiveAlgorithm:
+            conds = cnd.all_gather(g, ids=ChunkIds(), bytes=bytes,
+                                   chunks_per_npu=chunks_per_npu)
+            return self.synthesize(conds, name="pccl_all_gather")
+
+        return self._routed("all_gather", group, synth,
+                            params=(bytes, chunks_per_npu), ids=ids)
+
+    def all_to_all(
+        self, group: Sequence[int], *, bytes: float = 1.0,
+        chunks_per_pair: int = 1, ids: ChunkIds | None = None,
+    ) -> CollectiveAlgorithm:
+        def synth(g: list[int]) -> CollectiveAlgorithm:
+            conds = cnd.all_to_all(g, ids=ChunkIds(), bytes=bytes,
+                                   chunks_per_pair=chunks_per_pair)
+            return self.synthesize(conds, name="pccl_all_to_all")
+
+        return self._routed("all_to_all", group, synth,
+                            params=(bytes, chunks_per_pair), ids=ids)
+
+    def reduce(
+        self, group: Sequence[int], root: int, *, bytes: float = 1.0,
+        ids: ChunkIds | None = None,
+    ) -> CollectiveAlgorithm:
+        group = list(group)
+        root_pos = group.index(root)
+
+        def synth(g: list[int]) -> CollectiveAlgorithm:
+            return self._reduce_impl(g, g[root_pos], bytes=bytes)
+
+        return self._routed("reduce", group, synth,
+                            params=(bytes, root_pos), ids=ids)
+
+    def reduce_scatter(
+        self, group: Sequence[int], *, bytes: float = 1.0,
+        chunks_per_npu: int = 1, ids: ChunkIds | None = None,
+    ) -> CollectiveAlgorithm:
+        def synth(g: list[int]) -> CollectiveAlgorithm:
+            return self._reduce_scatter_impl(g, bytes=bytes,
+                                             chunks_per_npu=chunks_per_npu)
+
+        return self._routed("reduce_scatter", group, synth,
+                            params=(bytes, chunks_per_npu), ids=ids)
+
+    def all_reduce(
+        self, group: Sequence[int], *, bytes: float = 1.0,
+        ids: ChunkIds | None = None, pipelined: bool = False,
+    ) -> CollectiveAlgorithm:
+        def synth(g: list[int]) -> CollectiveAlgorithm:
+            return self._all_reduce_impl(g, bytes=bytes, pipelined=pipelined)
+
+        return self._routed("all_reduce", group, synth,
+                            params=(bytes, pipelined), ids=ids)
+
+    # -- reduction internals (paper §4.5, Fig. 8) ---------------------------
+
+    def _reverse_algorithm(
+        self,
+        alg: CollectiveAlgorithm,
+        reduce_conds: list[ReduceCondition],
+    ) -> CollectiveAlgorithm:
+        """Reverse a (broadcast/all-gather style) algorithm synthesized on the
+        reversed topology into a reduction algorithm on the forward topology.
+
+        Link k of reversed(topo) is link k of topo with endpoints swapped (by
+        construction), so link ids carry over directly. A transfer at [s, e)
+        maps to [T - e, T - s): in-trees become out-trees and causality is
+        preserved (child partials arrive before the parent forwards its own
+        partial)."""
+        T = max((t.end for t in alg.transfers), default=0.0)
+        base = min((c.release for c in reduce_conds), default=0.0)
+        rev = [
+            Transfer(t.chunk, t.link, t.dst, t.src, base + T - t.end,
+                     base + T - t.start, reduce=True)
+            for t in alg.transfers
+        ]
+        return CollectiveAlgorithm(self.topology, list(reduce_conds), rev,
+                                   name=alg.name)
+
+    def _reduce_impl(
+        self, group: list[int], root: int, *, bytes: float = 1.0,
+    ) -> CollectiveAlgorithm:
+        rconds = cnd.reduce(group, root, ids=ChunkIds(0), bytes=bytes)
+        bcast = [
+            Condition(r.chunk, root, r.srcs, bytes=r.bytes, tag="rev_bcast")
+            for r in rconds
+        ]
+        alg = self.synthesize(bcast, name="pccl_reduce",
+                              topology=self.reversed_topology())
+        return self._reverse_algorithm(alg, rconds)
+
+    def _reduce_scatter_impl(
+        self, group: list[int], *, bytes: float = 1.0, chunks_per_npu: int = 1,
+    ) -> CollectiveAlgorithm:
+        rconds = cnd.reduce_scatter(group, ids=ChunkIds(0), bytes=bytes,
+                                    chunks_per_npu=chunks_per_npu)
+        ag = [
+            Condition(r.chunk, next(iter(r.dests)), r.srcs, bytes=r.bytes,
+                      tag="rev_ag")
+            for r in rconds
+        ]
+        alg = self.synthesize(ag, name="pccl_reduce_scatter",
+                              topology=self.reversed_topology())
+        return self._reverse_algorithm(alg, rconds)
+
+    def _all_reduce_impl(
+        self, group: list[int], *, bytes: float = 1.0, pipelined: bool = False,
+    ) -> CollectiveAlgorithm:
+        """All-Reduce = Reduce-Scatter then All-Gather (paper §4.5). Each NPU
+        in the group owns one shard-chunk. With ``pipelined=True``
+        (beyond-paper), each chunk's All-Gather is released at that chunk's
+        Reduce-Scatter completion instead of the global makespan."""
+        rs = self._reduce_scatter_impl(group, bytes=bytes)
+        # per-chunk completion time of the reduce-scatter phase
+        owner = {c.chunk: next(iter(c.dests)) for c in rs.conditions}
+        done: dict[int, float] = {c.chunk: 0.0 for c in rs.conditions}
+        for t in rs.transfers:
+            done[t.chunk] = max(done[t.chunk], t.end)
+        rs_makespan = max(done.values(), default=0.0)
+
+        ag_conds = [
+            Condition(
+                c.chunk,
+                owner[c.chunk],
+                frozenset(group),
+                bytes=bytes,
+                release=(done[c.chunk] if pipelined else rs_makespan),
+                tag="allreduce_ag",
+            )
+            for c in rs.conditions
+        ]
+        ag = self.synthesize(ag_conds, preload=rs, name="pccl_all_reduce")
+        ar_conds = [
+            ReduceCondition(c.chunk, frozenset(group), frozenset(group),
+                            bytes=bytes)
+            for c in rs.conditions
+        ]
+        return CollectiveAlgorithm(
+            self.topology, ar_conds, rs.transfers + ag.transfers,
+            name="pccl_all_reduce",
+        )

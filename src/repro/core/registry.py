@@ -1,0 +1,366 @@
+"""AlgorithmRegistry: fingerprinted cache of synthesized collective algorithms.
+
+Production pods re-synthesize the *same* collectives over and over: every
+data-parallel row of a (data, model) mesh is an isomorphic process group, yet
+each ``synthesize_all_gather(topo, row_i)`` call used to redo the full
+TEN/BFS work. The registry makes synthesized algorithms first-class,
+canonicalized, cached artifacts:
+
+* **Fingerprint** — ``(topology structure hash, collective kind, canonical
+  process group, bytes/chunking params)``.
+* **Canonicalization** — the process group is relabeled through a *verified*
+  topology automorphism into a normal form (the lexicographically smallest
+  image over the enumerated symmetry group), so all 16 rows of a 16x16 torus
+  share one cached plan. Every candidate permutation is checked against the
+  link/node structure before use: a wrong symmetry generator can only reduce
+  sharing, never produce an invalid algorithm.
+* **Lookup** — a cache hit relabels the stored canonical algorithm back
+  through the inverse automorphism (nodes, link ids, and chunk ids), which is
+  O(transfers) instead of O(BFS * conditions). Relabeled algorithms have the
+  same makespan and pass the full validation oracle.
+* **Persistence** — in-memory LRU, plus optional on-disk JSON (the
+  ``to_msccl_json`` schema + the inverse loader in ``core.translate``) so a
+  pod restart reuses plans synthesized by a previous job.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from collections import Counter, OrderedDict
+from dataclasses import dataclass, field, replace
+from typing import Callable, Sequence
+
+from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import ChunkIds, Condition, ReduceCondition
+from repro.topology.topology import Topology
+
+# bound on the enumerated symmetry group (torus2d 16x16 translations = 256;
+# the cap only matters for pathological generator sets)
+_MAX_AUTOMORPHISMS = 4096
+
+
+# ---------------------------------------------------------------------------
+# Topology structure hashing and automorphism handling
+# ---------------------------------------------------------------------------
+
+def topology_fingerprint(topo: Topology) -> str:
+    """Hash of the labeled topology structure (nodes, attrs, links, timing).
+
+    Name-independent: two generator calls producing the same graph hash
+    equal, so registries persist across processes that rebuild the fabric.
+    """
+    cached = getattr(topo, "_structure_hash", None)
+    if cached is not None:
+        return cached
+    h = hashlib.sha256()
+    for n in topo.nodes:
+        h.update(repr((n.type.value, n.buffer_limit, n.multicast)).encode())
+    for l in topo.links:
+        h.update(repr((l.src, l.dst, l.alpha, l.beta)).encode())
+    digest = h.hexdigest()
+    topo._structure_hash = digest
+    return digest
+
+
+def is_automorphism(topo: Topology, perm: Sequence[int]) -> bool:
+    """Verify ``perm`` maps the topology onto itself: node attributes are
+    preserved and the multiset of (src, dst, alpha, beta) link signatures is
+    invariant. This is the safety gate for cache sharing."""
+    n = topo.num_nodes
+    if len(perm) != n or sorted(perm) != list(range(n)):
+        return False
+    for node in topo.nodes:
+        img = topo.nodes[perm[node.id]]
+        if (node.type, node.buffer_limit, node.multicast) != (
+                img.type, img.buffer_limit, img.multicast):
+            return False
+    orig = Counter((l.src, l.dst, l.alpha, l.beta) for l in topo.links)
+    mapped = Counter(
+        (perm[l.src], perm[l.dst], l.alpha, l.beta) for l in topo.links
+    )
+    return orig == mapped
+
+
+def _compose(p: tuple[int, ...], q: tuple[int, ...]) -> tuple[int, ...]:
+    """(p ∘ q)(i) = p[q[i]]."""
+    return tuple(p[x] for x in q)
+
+
+def enumerate_automorphisms(
+    topo: Topology, limit: int = _MAX_AUTOMORPHISMS
+) -> list[tuple[int, ...]]:
+    """Closure of the topology's declared (and verified) symmetry generators,
+    including the identity. Cached on the topology object."""
+    cached = getattr(topo, "_automorphism_closure", None)
+    if cached is not None:
+        return cached
+    identity = tuple(range(topo.num_nodes))
+    gens = [
+        tuple(g) for g in getattr(topo, "automorphism_generators", [])
+        if is_automorphism(topo, g)
+    ]
+    closure = {identity}
+    frontier = [identity]
+    while frontier and len(closure) < limit:
+        nxt = []
+        for p in frontier:
+            for g in gens:
+                q = _compose(g, p)
+                if q not in closure:
+                    closure.add(q)
+                    nxt.append(q)
+                    if len(closure) >= limit:
+                        break
+            if len(closure) >= limit:
+                break
+        frontier = nxt
+    result = sorted(closure)
+    topo._automorphism_closure = result
+    return result
+
+
+def canonicalize_group(
+    topo: Topology, group: Sequence[int]
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Return ``(canonical_group, perm)`` where ``perm`` is a verified
+    automorphism and ``canonical_group[i] == perm[group[i]]`` is the
+    lexicographically smallest image of the (ordered) group over the
+    topology's enumerated symmetries. Isomorphic process groups — e.g. the
+    rows of a torus — share one canonical form."""
+    group = list(group)
+    best_perm = tuple(range(topo.num_nodes))
+    best = tuple(group)
+    for perm in enumerate_automorphisms(topo):
+        img = tuple(perm[g] for g in group)
+        if img < best:
+            best, best_perm = img, perm
+    return best, best_perm
+
+
+def invert_permutation(perm: Sequence[int]) -> tuple[int, ...]:
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return tuple(inv)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm relabeling
+# ---------------------------------------------------------------------------
+
+def _link_map(topo: Topology, node_map: Sequence[int]) -> list[int]:
+    """Induced bijection on link ids for an automorphism ``node_map``.
+
+    Parallel links with identical (src, dst, alpha, beta) are matched by
+    ordinal, which is a consistent bijection because their attributes are
+    interchangeable."""
+    by_sig: dict[tuple, list[int]] = {}
+    for l in topo.links:
+        by_sig.setdefault((l.src, l.dst, l.alpha, l.beta), []).append(l.id)
+    mapped = [0] * topo.num_links
+    ordinal: dict[tuple, int] = {}
+    for l in topo.links:
+        sig = (l.src, l.dst, l.alpha, l.beta)
+        k = ordinal.get(sig, 0)
+        ordinal[sig] = k + 1
+        target_sig = (node_map[l.src], node_map[l.dst], l.alpha, l.beta)
+        mapped[l.id] = by_sig[target_sig][k]
+    return mapped
+
+
+def relabel_algorithm(
+    alg: CollectiveAlgorithm,
+    node_map: Sequence[int],
+    *,
+    chunk_map: dict[int, int] | None = None,
+) -> CollectiveAlgorithm:
+    """Relabel an algorithm through a topology automorphism (and optionally a
+    chunk-id remap). Transfer times are untouched, so the makespan — and
+    every validator invariant — is preserved by construction."""
+    topo = alg.topology
+    links = _link_map(topo, node_map)
+    cm = chunk_map or {}
+
+    def ch(c: int) -> int:
+        return cm.get(c, c)
+
+    conds = []
+    for c in alg.conditions:
+        if isinstance(c, ReduceCondition):
+            conds.append(replace(
+                c, chunk=ch(c.chunk),
+                srcs=frozenset(node_map[s] for s in c.srcs),
+                dests=frozenset(node_map[d] for d in c.dests),
+            ))
+        else:
+            conds.append(replace(
+                c, chunk=ch(c.chunk), src=node_map[c.src],
+                dests=frozenset(node_map[d] for d in c.dests),
+            ))
+    transfers = [
+        Transfer(ch(t.chunk), links[t.link], node_map[t.src], node_map[t.dst],
+                 t.start, t.end, t.reduce)
+        for t in alg.transfers
+    ]
+    return CollectiveAlgorithm(topo, conds, transfers, name=alg.name)
+
+
+def renumber_chunks(
+    alg: CollectiveAlgorithm, ids: ChunkIds | None
+) -> CollectiveAlgorithm:
+    """Remap chunk ids through the caller's allocator (condition order), so
+    registry-returned algorithms compose with joint synthesis."""
+    if ids is None:
+        return alg
+    mapping = {c.chunk: ids.next() for c in alg.conditions}
+    if all(k == v for k, v in mapping.items()):
+        return alg
+    conds = [replace(c, chunk=mapping[c.chunk]) for c in alg.conditions]
+    transfers = [replace(t, chunk=mapping[t.chunk]) for t in alg.transfers]
+    return CollectiveAlgorithm(alg.topology, conds, transfers, name=alg.name)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RegistryStats:
+    hits: int = 0
+    misses: int = 0
+    disk_hits: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "disk_hits": self.disk_hits, "evictions": self.evictions}
+
+
+class AlgorithmRegistry:
+    """LRU cache of canonical synthesized algorithms, keyed by fingerprint.
+
+    ``get_or_synthesize`` is the single entry point: it canonicalizes the
+    process group, consults memory then disk, synthesizes on the canonical
+    labels only on a true miss, and relabels the result back to the caller's
+    group. Thread-compat note: lookups mutate LRU order; guard externally if
+    shared across threads.
+    """
+
+    def __init__(self, max_entries: int = 256, cache_dir: str | None = None):
+        self.max_entries = max_entries
+        self.cache_dir = cache_dir
+        self.stats = RegistryStats()
+        self._lru: OrderedDict[tuple, CollectiveAlgorithm] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def clear(self) -> None:
+        self._lru.clear()
+        self.stats = RegistryStats()
+
+    # -- key construction ---------------------------------------------------
+
+    @staticmethod
+    def _key(topo: Topology, kind: str, canon: tuple[int, ...],
+             params: tuple) -> tuple:
+        return (topology_fingerprint(topo), kind, canon, params)
+
+    @staticmethod
+    def fingerprint(topo: Topology, kind: str, group: Sequence[int],
+                    params: tuple = ()) -> str:
+        """Stable hex fingerprint of a canonicalized request (also the
+        on-disk file stem)."""
+        canon, _ = canonicalize_group(topo, group)
+        key = AlgorithmRegistry._key(topo, kind, canon, params)
+        return hashlib.sha256(repr(key).encode()).hexdigest()
+
+    # -- disk persistence ---------------------------------------------------
+
+    def _disk_path(self, key: tuple) -> str | None:
+        if self.cache_dir is None:
+            return None
+        stem = hashlib.sha256(repr(key).encode()).hexdigest()
+        return os.path.join(self.cache_dir, f"{stem}.json")
+
+    def _load_disk(self, key: tuple, topo: Topology) -> CollectiveAlgorithm | None:
+        path = self._disk_path(key)
+        if path is None or not os.path.exists(path):
+            return None
+        from repro.core.translate import from_msccl_json
+
+        try:
+            with open(path, encoding="utf-8") as f:
+                return from_msccl_json(f.read(), topo)
+        except (OSError, ValueError, KeyError):
+            return None  # corrupt/stale entry: fall through to synthesis
+
+    def _store_disk(self, key: tuple, alg: CollectiveAlgorithm) -> None:
+        path = self._disk_path(key)
+        if path is None:
+            return
+        from repro.core.translate import to_msccl_json
+
+        os.makedirs(self.cache_dir, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.write(to_msccl_json(alg))
+        os.replace(tmp, path)
+
+    # -- main entry ---------------------------------------------------------
+
+    def get_or_synthesize(
+        self,
+        topo: Topology,
+        kind: str,
+        group: Sequence[int],
+        synth: Callable[[list[int]], CollectiveAlgorithm],
+        *,
+        params: tuple = (),
+        ids: ChunkIds | None = None,
+    ) -> CollectiveAlgorithm:
+        """Fetch (or synthesize and cache) the algorithm for ``kind`` over
+        ``group``. ``synth`` receives the canonicalized group (the images of
+        ``group``'s members, in order) and must build conditions with a fresh
+        ``ChunkIds()`` so cached chunk ids are dense from 0."""
+        group = list(group)
+        canon, perm = canonicalize_group(topo, group)
+        key = self._key(topo, kind, canon, params)
+
+        alg = self._lru.get(key)
+        if alg is not None:
+            self._lru.move_to_end(key)
+            self.stats.hits += 1
+        else:
+            alg = self._load_disk(key, topo)
+            if alg is not None:
+                self.stats.disk_hits += 1
+            else:
+                alg = synth(list(canon))
+                self.stats.misses += 1
+                self._store_disk(key, alg)
+            self._lru[key] = alg
+            while len(self._lru) > self.max_entries:
+                self._lru.popitem(last=False)
+                self.stats.evictions += 1
+
+        if canon != tuple(group):
+            alg = relabel_algorithm(alg, invert_permutation(perm))
+        return renumber_chunks(alg, ids)
+
+
+_DEFAULT_REGISTRY: AlgorithmRegistry | None = None
+
+
+def default_registry() -> AlgorithmRegistry:
+    """Process-wide shared registry (used by repro.comms and repro.launch).
+
+    Set ``PCCL_CACHE_DIR`` to persist synthesized algorithms across runs.
+    """
+    global _DEFAULT_REGISTRY
+    if _DEFAULT_REGISTRY is None:
+        _DEFAULT_REGISTRY = AlgorithmRegistry(
+            cache_dir=os.environ.get("PCCL_CACHE_DIR") or None
+        )
+    return _DEFAULT_REGISTRY

@@ -1,103 +1,31 @@
-"""PCCL synthesis loop (paper §4.4, Algorithm 3) and reduction collectives (§4.5).
+"""Back-compat synthesis front-ends (paper §4.4, Algorithm 3; §4.5 Fig. 8).
 
-``synthesize`` is the paper's Algorithm 3: order conditions by descending
-max-shortest-path distance (longest-haul chunks claim network resources
-first, heuristically maximizing utilization, as in TACCL), then run BFS
-pathfinding per condition and commit the pruned paths' link occupancy into
-the shared TEN so later chunks route around them — congestion-free by
-construction.
-
-Reduction collectives are synthesized by reversing non-reduction algorithms
-(paper Fig. 8): Reduce = reverse(Broadcast), Reduce-Scatter =
-reverse(All-Gather), All-Reduce = Reduce-Scatter ∘ All-Gather. Our All-Reduce
-additionally supports chunk-level pipelining (the All-Gather of a chunk is
-released the moment its Reduce-Scatter completes) — a beyond-paper
-optimization, off by default for paper fidelity.
+The synthesis loop itself lives in :class:`repro.core.engine.SynthesisEngine`,
+which owns TEN lifecycle, int/cont mode selection, condition ordering, and
+commit — and can route named collectives through an
+:class:`repro.core.registry.AlgorithmRegistry` so isomorphic process groups
+share one cached plan. The ``synthesize*`` functions below are thin wrappers
+that build a throwaway engine per call; they keep every historical signature
+working. Pass ``registry=`` to opt into caching from these wrappers too.
 """
 
 from __future__ import annotations
 
-import heapq
-from dataclasses import replace
-
-from repro.core import conditions as cnd
-from repro.core.algorithm import CollectiveAlgorithm, Transfer
-from repro.core.conditions import ChunkIds, Condition, ReduceCondition
-from repro.core.pathfinding import PathResult, bfs_cont, bfs_int
-from repro.core.ten import TEN
+from repro.core.algorithm import CollectiveAlgorithm
+from repro.core.conditions import ChunkIds, Condition
+from repro.core.engine import SynthesisEngine, order_conditions
 from repro.topology.topology import Topology
 
-
-# ---------------------------------------------------------------------------
-# Distances for condition ordering (Algorithm 3, lines 1-7)
-# ---------------------------------------------------------------------------
-
-class _DistanceCache:
-    """Per-source shortest-path times on the static topology, cached.
-
-    Homogeneous graphs use hop counts; heterogeneous use alpha-beta link
-    times for the given chunk size (Dijkstra).
-    """
-
-    def __init__(self, topo: Topology):
-        self.topo = topo
-        self.homog = topo.homogeneous()
-        self._cache: dict = {}
-
-    def dist(self, src: int, chunk_bytes: float) -> list[float]:
-        key = (src, None if self.homog else chunk_bytes)
-        got = self._cache.get(key)
-        if got is not None:
-            return got
-        topo = self.topo
-        if self.homog:
-            d = [float(x) for x in topo.hop_distances_from(src)]
-            d = [x if x >= 0 else float("inf") for x in d]
-        else:
-            d = [float("inf")] * topo.num_nodes
-            d[src] = 0.0
-            heap = [(0.0, src)]
-            while heap:
-                du, u = heapq.heappop(heap)
-                if du > d[u]:
-                    continue
-                for link in topo.out_links(u):
-                    alt = du + link.transfer_time(chunk_bytes)
-                    if alt < d[link.dst]:
-                        d[link.dst] = alt
-                        heapq.heappush(heap, (alt, link.dst))
-        self._cache[key] = d
-        return d
-
-    def condition_dist(self, c: Condition) -> float:
-        d = self.dist(c.src, c.bytes)
-        return max((d[dst] for dst in c.remote_dests), default=0.0)
-
-
-def order_conditions(topo: Topology, conds: list[Condition]) -> list[Condition]:
-    """Sort descending by max shortest-path distance (Algorithm 3 line 7);
-    deterministic tie-break on (bytes, chunk id)."""
-    cache = _DistanceCache(topo)
-    return sorted(
-        conds, key=lambda c: (-cache.condition_dist(c), -c.bytes, c.chunk)
-    )
-
-
-# ---------------------------------------------------------------------------
-# Non-reduction synthesis (Algorithm 3)
-# ---------------------------------------------------------------------------
-
-def _use_int_mode(topo: Topology, conds: list[Condition]) -> bool:
-    if not topo.homogeneous() or not conds:
-        return False
-    b0 = conds[0].bytes
-    if any(c.bytes != b0 for c in conds):
-        return False
-    if any(c.release != int(c.release) for c in conds):
-        return False
-    # unit transfer time required for the integer TEN
-    link = topo.links[0] if topo.links else None
-    return link is None or link.transfer_time(b0) == 1.0
+__all__ = [
+    "order_conditions",
+    "synthesize",
+    "synthesize_all_gather",
+    "synthesize_all_reduce",
+    "synthesize_all_to_all",
+    "synthesize_joint",
+    "synthesize_reduce",
+    "synthesize_reduce_scatter",
+]
 
 
 def synthesize(
@@ -110,160 +38,52 @@ def synthesize(
 ) -> CollectiveAlgorithm:
     """Paper Algorithm 3. `preload`'s transfers are committed into the TEN
     first (used to compose All-Reduce phases without link conflicts)."""
-    ten = TEN(topo)
-    int_mode = mode == "int" or (mode == "auto" and _use_int_mode(topo, conds))
-    sizes = {c.chunk: c.bytes for c in conds}
-    if preload is not None:
-        for t in preload.transfers:
-            if int_mode:
-                ten.commit_int(t.link, int(t.start))
-            else:
-                ten.commit(t.link, t.start, t.end)
-        for c in preload.conditions:
-            sizes.setdefault(c.chunk, c.bytes)
-
-    ordered = order_conditions(topo, conds)
-    transfers: list[Transfer] = []
-    for c in ordered:
-        result: PathResult = bfs_int(ten, c) if int_mode else bfs_cont(ten, c)
-        _commit(ten, topo, result, int_mode)
-        transfers.extend(result.transfers)
-    return CollectiveAlgorithm(topo, list(conds), transfers, name=name)
+    return SynthesisEngine(topo).synthesize(
+        conds, preload=preload, mode=mode, name=name
+    )
 
 
-def _commit(ten: TEN, topo: Topology, result: PathResult, int_mode: bool) -> None:
-    # occupy links of retained paths only (paper Fig. 6e / Fig. 7)
-    last_send_end: dict[int, float] = {}
-    for t in result.transfers:
-        if int_mode:
-            ten.commit_int(t.link, int(t.start))
-        else:
-            ten.commit(t.link, t.start, t.end)
-        if topo.is_switch(t.src):
-            last_send_end[t.src] = max(last_send_end.get(t.src, 0.0), t.end)
-    # switch residency: arrival .. last retained forward
-    for t in result.transfers:
-        if topo.is_switch(t.dst):
-            ten.commit_residency(
-                t.dst, t.end, max(last_send_end.get(t.dst, t.end), t.end)
-            )
+def synthesize_all_gather(topo, group, *, bytes=1.0, chunks_per_npu=1,
+                          ids=None, registry=None):
+    return SynthesisEngine(topo, registry=registry).all_gather(
+        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids
+    )
 
 
-# ---------------------------------------------------------------------------
-# Reduction collectives via reversal (paper §4.5, Fig. 8)
-# ---------------------------------------------------------------------------
-
-def _reverse_algorithm(
-    alg: CollectiveAlgorithm,
-    fwd_topo: Topology,
-    reduce_conds: list[ReduceCondition],
-) -> CollectiveAlgorithm:
-    """Reverse a (broadcast/all-gather style) algorithm synthesized on the
-    reversed topology into a reduction algorithm on the forward topology.
-
-    Link k of reversed(topo) is link k of topo with endpoints swapped (by
-    construction), so link ids carry over directly. A transfer at [s, e) maps
-    to [T - e, T - s): in-trees become out-trees and causality is preserved
-    (child partials arrive before the parent forwards its own partial).
-    """
-    T = max((t.end for t in alg.transfers), default=0.0)
-    base = min((c.release for c in reduce_conds), default=0.0)
-    rev = [
-        Transfer(t.chunk, t.link, t.dst, t.src, base + T - t.end, base + T - t.start,
-                 reduce=True)
-        for t in alg.transfers
-    ]
-    return CollectiveAlgorithm(fwd_topo, list(reduce_conds), rev, name=alg.name)
+def synthesize_all_to_all(topo, group, *, bytes=1.0, chunks_per_pair=1,
+                          ids=None, registry=None):
+    return SynthesisEngine(topo, registry=registry).all_to_all(
+        list(group), bytes=bytes, chunks_per_pair=chunks_per_pair, ids=ids
+    )
 
 
 def synthesize_reduce(
     topo: Topology, group: list[int], root: int, *,
-    bytes: float = 1.0, ids: ChunkIds | None = None,
+    bytes: float = 1.0, ids: ChunkIds | None = None, registry=None,
 ) -> CollectiveAlgorithm:
-    ids = ids or ChunkIds()
-    rconds = cnd.reduce(group, root, ids=ChunkIds(0), bytes=bytes)
-    rconds = [replace(r, chunk=ids.next()) for r in rconds]
-    rev_topo = topo.reversed()
-    bcast = [
-        Condition(r.chunk, root, r.srcs, bytes=r.bytes, tag="rev_bcast")
-        for r in rconds
-    ]
-    alg = synthesize(rev_topo, bcast, name="pccl_reduce")
-    return _reverse_algorithm(alg, topo, rconds)
+    return SynthesisEngine(topo, registry=registry).reduce(
+        list(group), root, bytes=bytes, ids=ids
+    )
 
 
 def synthesize_reduce_scatter(
     topo: Topology, group: list[int], *,
     bytes: float = 1.0, chunks_per_npu: int = 1, ids: ChunkIds | None = None,
+    registry=None,
 ) -> CollectiveAlgorithm:
-    ids = ids or ChunkIds()
-    rconds = [
-        replace(r, chunk=ids.next())
-        for r in cnd.reduce_scatter(group, ids=ChunkIds(0), bytes=bytes,
-                                    chunks_per_npu=chunks_per_npu)
-    ]
-    rev_topo = topo.reversed()
-    ag = [
-        Condition(r.chunk, next(iter(r.dests)), r.srcs, bytes=r.bytes, tag="rev_ag")
-        for r in rconds
-    ]
-    alg = synthesize(rev_topo, ag, name="pccl_reduce_scatter")
-    return _reverse_algorithm(alg, topo, rconds)
+    return SynthesisEngine(topo, registry=registry).reduce_scatter(
+        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids
+    )
 
 
 def synthesize_all_reduce(
     topo: Topology, group: list[int], *,
     bytes: float = 1.0, ids: ChunkIds | None = None, pipelined: bool = False,
+    registry=None,
 ) -> CollectiveAlgorithm:
-    """All-Reduce = Reduce-Scatter then All-Gather (paper §4.5). Each NPU in
-    the group owns one shard-chunk. With ``pipelined=True`` (beyond-paper),
-    each chunk's All-Gather is released at that chunk's Reduce-Scatter
-    completion instead of the global Reduce-Scatter makespan."""
-    ids = ids or ChunkIds()
-    group = list(group)
-    rs = synthesize_reduce_scatter(topo, group, bytes=bytes, ids=ids)
-    # per-chunk completion time of the reduce-scatter phase
-    owner = {c.chunk: next(iter(c.dests)) for c in rs.conditions}
-    done: dict[int, float] = {c.chunk: 0.0 for c in rs.conditions}
-    for t in rs.transfers:
-        done[t.chunk] = max(done[t.chunk], t.end)
-    rs_makespan = max(done.values(), default=0.0)
-
-    ag_conds = [
-        Condition(
-            c.chunk,
-            owner[c.chunk],
-            frozenset(group),
-            bytes=bytes,
-            release=(done[c.chunk] if pipelined else rs_makespan),
-            tag="allreduce_ag",
-        )
-        for c in rs.conditions
-    ]
-    ag = synthesize(topo, ag_conds, preload=rs, name="pccl_all_reduce")
-    ar_conds = [
-        ReduceCondition(c.chunk, frozenset(group), frozenset(group), bytes=bytes)
-        for c in rs.conditions
-    ]
-    return CollectiveAlgorithm(
-        topo, ar_conds, rs.transfers + ag.transfers, name="pccl_all_reduce"
+    return SynthesisEngine(topo, registry=registry).all_reduce(
+        list(group), bytes=bytes, ids=ids, pipelined=pipelined
     )
-
-
-# ---------------------------------------------------------------------------
-# Convenience front-ends
-# ---------------------------------------------------------------------------
-
-def synthesize_all_gather(topo, group, *, bytes=1.0, chunks_per_npu=1, ids=None):
-    conds = cnd.all_gather(list(group), ids=ids or ChunkIds(), bytes=bytes,
-                           chunks_per_npu=chunks_per_npu)
-    return synthesize(topo, conds, name="pccl_all_gather")
-
-
-def synthesize_all_to_all(topo, group, *, bytes=1.0, chunks_per_pair=1, ids=None):
-    conds = cnd.all_to_all(list(group), ids=ids or ChunkIds(), bytes=bytes,
-                           chunks_per_pair=chunks_per_pair)
-    return synthesize(topo, conds, name="pccl_all_to_all")
 
 
 def synthesize_joint(
@@ -275,12 +95,4 @@ def synthesize_joint(
     """Jointly synthesize several process groups' collectives over one shared
     TEN (paper §6.4, Fig. 15). Chunk ids across groups must be unique — use a
     shared ChunkIds allocator."""
-    all_conds: list[Condition] = []
-    for tag, conds in groups:
-        all_conds.extend(replace(c, tag=tag) for c in conds)
-    seen: set[int] = set()
-    for c in all_conds:
-        if c.chunk in seen:
-            raise ValueError(f"duplicate chunk id {c.chunk} across process groups")
-        seen.add(c.chunk)
-    return synthesize(topo, all_conds, name=name)
+    return SynthesisEngine(topo).synthesize_joint(groups, name=name)

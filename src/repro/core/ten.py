@@ -37,6 +37,9 @@ class TEN:
         self._residency: dict[int, list[tuple[float, float]]] = defaultdict(list)
         # integer fast path: per-link set of occupied unit timesteps
         self._busy_int: list[set[int]] = [set() for _ in range(topology.num_links)]
+        # latest committed busy end, maintained incrementally by commit/
+        # commit_int so horizon() is O(1) instead of rescanning every link
+        self._horizon: float = 0.0
 
     # ------------------------------------------------------------------
     # Continuous (heterogeneous) interface — paper §4.6
@@ -65,6 +68,8 @@ class TEN:
         if i < len(intervals) and intervals[i][0] < end - _EPS:
             raise AssertionError(f"link {link}: overlap committing [{start},{end})")
         intervals.insert(i, (start, end))
+        if end > self._horizon:
+            self._horizon = end
 
     # ------------------------------------------------------------------
     # Integer fast path (homogeneous, uniform chunk size) — paper §4.2
@@ -82,6 +87,8 @@ class TEN:
         if t in self._busy_int[link]:
             raise AssertionError(f"link {link}: timestep {t} already occupied")
         self._busy_int[link].add(t)
+        if t + 1 > self._horizon:
+            self._horizon = float(t + 1)
 
     # ------------------------------------------------------------------
     # Switch residency (buffer limits) — paper §4.7
@@ -103,12 +110,7 @@ class TEN:
 
     # ------------------------------------------------------------------
     def horizon(self) -> float:
-        """Latest committed busy end (safety bound for searches)."""
-        h = 0.0
-        for intervals in self._busy:
-            if intervals:
-                h = max(h, intervals[-1][1])
-        for busy in self._busy_int:
-            if busy:
-                h = max(h, max(busy) + 1)
-        return h
+        """Latest committed busy end (safety bound for searches). Tracked
+        incrementally at commit time — called once per BFS, so rescanning
+        every link's intervals here was O(links) per pathfinding call."""
+        return self._horizon

@@ -18,6 +18,7 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 
 from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import Condition, ReduceCondition
 
 
 @dataclass(frozen=True)
@@ -106,26 +107,84 @@ def to_ppermute_program(
 
 def to_msccl_json(alg: CollectiveAlgorithm) -> str:
     """MSCCL-IR-flavored JSON: per-NPU ordered op lists with explicit
-    dependencies implied by transfer times."""
+    dependencies implied by transfer times. The ``conditions`` section (an
+    additive extension to the IR) records the pre/postconditions so the
+    document round-trips through :func:`from_msccl_json` — this is the
+    on-disk format of the algorithm registry."""
     ops_by_npu: dict[int, list[dict]] = defaultdict(list)
     for i, t in enumerate(alg.transfers):
         ops_by_npu[t.src].append(
             {"op": "send", "chunk": t.chunk, "peer": t.dst, "t_start": t.start,
-             "t_end": t.end, "link": t.link, "idx": i}
+             "t_end": t.end, "link": t.link, "idx": i, "reduce": t.reduce}
         )
         kind = "recv_reduce" if t.reduce else "recv"
         ops_by_npu[t.dst].append(
             {"op": kind, "chunk": t.chunk, "peer": t.src, "t_start": t.start,
-             "t_end": t.end, "link": t.link, "idx": i}
+             "t_end": t.end, "link": t.link, "idx": i, "reduce": t.reduce}
         )
+    conditions = []
+    for c in alg.conditions:
+        entry = {"chunk": c.chunk, "dests": sorted(c.dests), "bytes": c.bytes,
+                 "release": c.release, "tag": c.tag}
+        if isinstance(c, ReduceCondition):
+            entry["srcs"] = sorted(c.srcs)
+        else:
+            entry["src"] = c.src
+        conditions.append(entry)
     doc = {
         "name": alg.name,
         "topology": alg.topology.name,
         "num_npus": len(alg.topology.npus),
         "makespan": alg.makespan,
+        "conditions": conditions,
         "gpus": [
             {"id": npu, "ops": sorted(ops, key=lambda o: (o["t_start"], o["idx"]))}
             for npu, ops in sorted(ops_by_npu.items())
         ],
     }
     return json.dumps(doc, indent=1)
+
+
+def from_msccl_json(doc: str | dict, topology) -> CollectiveAlgorithm:
+    """Inverse of :func:`to_msccl_json`: rebuild a ``CollectiveAlgorithm``
+    against ``topology`` (which must be the fabric the document was exported
+    from — link ids are positional). Raises ``ValueError`` on documents
+    missing the ``conditions`` extension or referencing unknown links."""
+    if isinstance(doc, str):
+        doc = json.loads(doc)
+    if "conditions" not in doc:
+        raise ValueError("document lacks the 'conditions' section; "
+                         "re-export with to_msccl_json")
+    conds: list = []
+    for e in doc["conditions"]:
+        if "srcs" in e:
+            conds.append(ReduceCondition(
+                e["chunk"], frozenset(e["srcs"]), frozenset(e["dests"]),
+                e.get("bytes", 1.0), e.get("release", 0.0), e.get("tag", "")))
+        else:
+            conds.append(Condition(
+                e["chunk"], e["src"], frozenset(e["dests"]),
+                e.get("bytes", 1.0), e.get("release", 0.0), e.get("tag", "")))
+    reduce_idx = {
+        op["idx"] for gpu in doc["gpus"] for op in gpu["ops"]
+        if op["op"] == "recv_reduce"
+    }
+    transfers: list[Transfer] = []
+    for gpu in doc["gpus"]:
+        for op in gpu["ops"]:
+            if op["op"] != "send":
+                continue
+            link_id = op["link"]
+            if not 0 <= link_id < topology.num_links:
+                raise ValueError(f"op references unknown link {link_id}")
+            link = topology.links[link_id]
+            if (link.src, link.dst) != (gpu["id"], op["peer"]):
+                raise ValueError(
+                    f"link {link_id} endpoints do not match op "
+                    f"{gpu['id']}->{op['peer']}: topology mismatch")
+            transfers.append(Transfer(
+                op["chunk"], link_id, gpu["id"], op["peer"],
+                op["t_start"], op["t_end"],
+                reduce=op.get("reduce", op["idx"] in reduce_idx)))
+    return CollectiveAlgorithm(topology, conds, transfers,
+                               name=doc.get("name", "pccl"))

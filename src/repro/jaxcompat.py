@@ -1,0 +1,30 @@
+"""Version-compat shims for the small jax API surface that moved recently.
+
+The deployment code targets current jax (``jax.make_mesh(axis_types=...)``,
+``jax.shard_map``); CI containers may carry an older release where mesh axis
+types don't exist yet and shard_map still lives under ``jax.experimental``.
+Routing every call site through this module keeps both worlds working.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.6 jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_types_kwargs(num_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` where supported, else ``{}``."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * num_axes}
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the release has them."""
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        **axis_types_kwargs(len(tuple(axis_names))),
+    )

@@ -8,7 +8,7 @@ and smoke tests/benches must keep seeing 1 device.
 
 from __future__ import annotations
 
-import jax
+from repro.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,22 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis is pure data parallelism across the DCI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4, *, pods: int = 0):
     """Small mesh for CPU integration tests (requires forced host devices)."""
     if pods:
-        return jax.make_mesh(
-            (pods, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return make_mesh((pods, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axis_size(mesh, name: str) -> int:

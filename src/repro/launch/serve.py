@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
+from repro.jaxcompat import make_mesh
 from repro.launch.sharding import ShardingPolicy, pad_heads
 from repro.models import LM
 
@@ -42,8 +43,7 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     n = jax.device_count()
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n), ("data", "model"))
     policy = ShardingPolicy(mesh, cfg)
     cfg = pad_heads(cfg, policy.tp_size)
     policy.cfg = cfg

@@ -203,3 +203,91 @@ class ShardingPolicy:
         dp = self.dp if batch_size % self.dp_size == 0 else None
         v = self.tp if self.cfg.vocab_size % max(self.tp_size, 1) == 0 else None
         return P(dp, v)
+
+    def collective_planner(self, topo, registry=None) -> "MeshCollectivePlanner":
+        """A planner for this policy's mesh over the physical fabric."""
+        return MeshCollectivePlanner(
+            topo,
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape)),
+            registry=registry,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis collectives through the algorithm registry
+# ---------------------------------------------------------------------------
+
+class MeshCollectivePlanner:
+    """Routes per-mesh-axis process-group collectives through the shared
+    :class:`repro.core.registry.AlgorithmRegistry`.
+
+    A (data, model) mesh laid row-major on the physical torus induces one
+    process group per row of every axis: ``model``-axis groups vary the last
+    axis, ``data``-axis groups the first, etc. All groups of one axis are
+    isomorphic under the torus translations, so the registry synthesizes each
+    (axis, collective, bytes) combination exactly once and serves every other
+    row by relabeling — instead of the old per-row ad-hoc ``synthesize_*``
+    calls.
+
+    ``axis_sizes`` is an ordered {axis name: size} whose product must equal
+    the NPU count; device index = row-major rank, assumed to coincide with
+    the topology's NPU ids (true for ``tpu_v5e_pod``/``torus2d`` meshes).
+    """
+
+    def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None):
+        from repro.core.engine import SynthesisEngine
+        from repro.core.registry import default_registry
+
+        self.topo = topo
+        self.axis_sizes = dict(axis_sizes)
+        shape = tuple(self.axis_sizes.values())
+        if int(np.prod(shape)) != len(topo.npus):
+            raise ValueError(
+                f"mesh {self.axis_sizes} has {int(np.prod(shape))} devices "
+                f"but topology has {len(topo.npus)} NPUs"
+            )
+        self.registry = registry if registry is not None else default_registry()
+        self.engine = SynthesisEngine(topo, registry=self.registry)
+        self._ranks = np.arange(int(np.prod(shape))).reshape(shape)
+
+    def axis_groups(self, axis: str) -> list[list[int]]:
+        """Every process group of ``axis``: vary that axis, fix the others."""
+        names = list(self.axis_sizes)
+        k = names.index(axis)
+        moved = np.moveaxis(self._ranks, k, -1)
+        return [list(map(int, row)) for row in
+                moved.reshape(-1, self.axis_sizes[axis])]
+
+    def algorithm(self, kind: str, axis: str, group_index: int = 0, *,
+                  nbytes: float = 1.0, **kw):
+        """The synthesized (or registry-served) algorithm for one group."""
+        if kind not in ("all_gather", "all_to_all", "all_reduce",
+                        "reduce_scatter", "reduce"):
+            raise ValueError(f"unknown collective kind {kind!r}")
+        group = self.axis_groups(axis)[group_index]
+        return getattr(self.engine, kind)(group, bytes=nbytes, **kw)
+
+    def warm(self, kinds=("all_gather", "reduce_scatter"), *,
+             nbytes: float = 1.0) -> dict:
+        """Pre-populate the registry for every axis/kind; returns stats.
+
+        Thanks to canonicalization this costs one cold synthesis per
+        (axis, kind) — the remaining rows are cache hits."""
+        for axis in self.axis_sizes:
+            for kind in kinds:
+                for i in range(len(self.axis_groups(axis))):
+                    self.algorithm(kind, axis, i, nbytes=nbytes)
+        return self.registry.stats.as_dict()
+
+    def program(self, kind: str, axis: str, group_index: int = 0, *,
+                nbytes: float = 1.0):
+        """(PpermuteProgram, BufferPlan) for executing one group's collective
+        inside shard_map — synthesis, translation, and buffer planning all
+        cached by fingerprint (see repro.comms)."""
+        from repro.comms.primitives import CollectiveSpec, synthesize_program
+
+        group = tuple(self.axis_groups(axis)[group_index])
+        return synthesize_program(
+            self.topo, CollectiveSpec(kind, group), nbytes=nbytes,
+            registry=self.registry,
+        )

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
+from repro.jaxcompat import make_mesh
 from repro.configs import SHAPES, get_config
 from repro.data.pipeline import DataPipeline
 from repro.launch.sharding import ShardingPolicy, pad_heads
@@ -60,8 +61,7 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     n = jax.device_count()
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n), ("data", "model"))
     policy = ShardingPolicy(mesh, cfg)
     cfg = pad_heads(cfg, policy.tp_size)
     policy.cfg = cfg

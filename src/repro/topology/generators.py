@@ -22,6 +22,7 @@ def ring(n: int, alpha: float = 0.0, beta: float = 1.0, bidirectional: bool = Fa
         topo.add_link(i, (i + 1) % n, alpha, beta)
         if bidirectional:
             topo.add_link((i + 1) % n, i, alpha, beta)
+    topo.automorphism_generators = [tuple((i + 1) % n for i in range(n))]
     return topo
 
 
@@ -45,6 +46,11 @@ def mesh2d(rows: int, cols: int, alpha: float = 0.0, beta: float = 1.0) -> Topol
                 topo.add_bidir_link(idx(r, c), idx(r, c + 1), alpha, beta)
             if r + 1 < rows:
                 topo.add_bidir_link(idx(r, c), idx(r + 1, c), alpha, beta)
+    # mesh symmetries: row and column reflections (no wraparound -> no shifts)
+    topo.automorphism_generators = [
+        tuple(idx(rows - 1 - r, c) for r in range(rows) for c in range(cols)),
+        tuple(idx(r, cols - 1 - c) for r in range(rows) for c in range(cols)),
+    ]
     return topo
 
 
@@ -57,6 +63,12 @@ def torus2d(rows: int, cols: int, alpha: float = 0.0, beta: float = 1.0) -> Topo
         for c in range(cols):
             topo.add_bidir_link(idx(r, c), idx(r, (c + 1) % cols), alpha, beta)
             topo.add_bidir_link(idx(r, c), idx((r + 1) % rows, c), alpha, beta)
+    # torus symmetries: cyclic row/column translations (every row of a mesh
+    # of process groups is isomorphic to every other row through these)
+    topo.automorphism_generators = [
+        tuple(idx((r + 1) % rows, c) for r in range(rows) for c in range(cols)),
+        tuple(idx(r, (c + 1) % cols) for r in range(rows) for c in range(cols)),
+    ]
     return topo
 
 
@@ -70,6 +82,12 @@ def torus3d(x: int, y: int, z: int, alpha: float = 0.0, beta: float = 1.0) -> To
                 topo.add_bidir_link(idx(i, j, k), idx((i + 1) % x, j, k), alpha, beta)
                 topo.add_bidir_link(idx(i, j, k), idx(i, (j + 1) % y, k), alpha, beta)
                 topo.add_bidir_link(idx(i, j, k), idx(i, j, (k + 1) % z), alpha, beta)
+    iters = [(i, j, k) for i in range(x) for j in range(y) for k in range(z)]
+    topo.automorphism_generators = [
+        tuple(idx((i + 1) % x, j, k) for i, j, k in iters),
+        tuple(idx(i, (j + 1) % y, k) for i, j, k in iters),
+        tuple(idx(i, j, (k + 1) % z) for i, j, k in iters),
+    ]
     return topo
 
 
@@ -84,6 +102,10 @@ def hypercube(dims: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
             j = i ^ (1 << b)
             if j > i:
                 topo.add_bidir_link(i, j, alpha, beta)
+    # XOR translations generate a transitive symmetry group of size 2**dims
+    topo.automorphism_generators = [
+        tuple(i ^ (1 << b) for i in range(n)) for b in range(dims)
+    ]
     return topo
 
 
@@ -114,6 +136,8 @@ def star_switch(
     sw = topo.add_node(NodeType.SWITCH, buffer_limit=buffer_limit, multicast=multicast)
     for i in range(n):
         topo.add_bidir_link(i, sw, alpha, beta)
+    # any rotation of the leaves fixes the star (switch stays put)
+    topo.automorphism_generators = [tuple((i + 1) % n for i in range(n)) + (sw,)]
     return topo
 
 

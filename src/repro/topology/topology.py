@@ -58,14 +58,29 @@ class Topology:
         self.links: list[Link] = []
         self._out: list[list[Link]] = []  # node id -> outgoing links
         self._in: list[list[Link]] = []  # node id -> incoming links
+        # Known symmetry generators: node permutations that map the topology
+        # onto itself (set by generators that know their structure, e.g.
+        # torus translations). The algorithm registry verifies each one
+        # before use, so a wrong generator degrades cache sharing, never
+        # correctness. Empty = only the identity is assumed.
+        self.automorphism_generators: list[tuple[int, ...]] = []
 
     # -- construction ------------------------------------------------------
+    def _invalidate_caches(self) -> None:
+        """Drop memoized derived state (structure hash, automorphism closure,
+        attached synthesis engines) when the graph mutates."""
+        for attr in ("_structure_hash", "_automorphism_closure",
+                     "_pccl_engines"):
+            if hasattr(self, attr):
+                delattr(self, attr)
+
     def add_node(
         self,
         type: NodeType = NodeType.NPU,
         buffer_limit: int | None = None,
         multicast: bool = True,
     ) -> int:
+        self._invalidate_caches()
         nid = len(self.nodes)
         self.nodes.append(Node(nid, type, buffer_limit, multicast))
         self._out.append([])
@@ -80,6 +95,7 @@ class Topology:
     ) -> int:
         if src == dst:
             raise ValueError(f"self-link on node {src}")
+        self._invalidate_caches()
         link = Link(len(self.links), src, dst, alpha, beta)
         self.links.append(link)
         self._out[src].append(link)
@@ -147,6 +163,8 @@ class Topology:
             rev.add_node(node.type, node.buffer_limit, node.multicast)
         for link in self.links:
             rev.add_link(link.dst, link.src, link.alpha, link.beta)
+        # node symmetries are direction-agnostic
+        rev.automorphism_generators = list(self.automorphism_generators)
         return rev
 
     def __repr__(self) -> str:

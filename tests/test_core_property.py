@@ -2,9 +2,12 @@
 random topology satisfies the full validation oracle — postconditions met,
 congestion-free, causal, alpha-beta-timed, switch-legal."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import (
     ChunkIds,
