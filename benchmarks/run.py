@@ -7,12 +7,45 @@
 Prints ``name,us_per_call,derived`` CSV. `us_per_call` is synthesis wall time
 where the benchmark synthesizes; derived carries the figure's metric
 (speedups, makespans, roofline terms, ...).
+
+Every run also writes ``BENCH_synthesis.json`` at the repo root (one record
+per row: name, us, meta) so the performance trajectory is tracked across
+PRs; rows from a filtered run (``--only``) are merged over the previous
+file's rows instead of replacing them.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_synthesis.json")
+
+
+def write_bench_json(rows: list, full: bool, merge: bool) -> str:
+    """Persist rows as [{name, us, meta}, ...] at the repo root."""
+    path = os.path.abspath(_BENCH_JSON)
+    records = {}
+    if merge and os.path.exists(path):
+        try:
+            with open(path, encoding="utf-8") as f:
+                records = {r["name"]: r for r in json.load(f)["rows"]}
+        except (OSError, ValueError, KeyError):
+            records = {}
+    for row in rows:
+        records[row.name] = {"name": row.name, "us": row.us_per_call,
+                             "meta": row.derived}
+    doc = {"suite": "pccl-repro", "full": full,
+           "rows": sorted(records.values(), key=lambda r: r["name"])}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def main() -> None:
@@ -45,16 +78,20 @@ def main() -> None:
         ("registry", registry_amortization),
         ("roofline", roofline),
     ]
+    all_rows = []
     print("name,us_per_call,derived")
     for tag, mod in modules:
         if args.only and args.only not in tag and args.only not in mod.__name__:
             continue
         try:
             for row in mod.run(full=args.full):
+                all_rows.append(row)
                 print(row.csv())
                 sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             print(f"{tag}_FAILED,0,{type(e).__name__}: {e}")
+    path = write_bench_json(all_rows, args.full, merge=args.only is not None)
+    print(f"# wrote {len(all_rows)} rows -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -17,11 +17,13 @@ from repro.topology import mesh2d, tpu_v5e_pod
 
 def main():
     # paper setup: 3x3 mesh; NPUs 0-2 run All-to-Allv (NPU 0 sends 2x),
-    # NPUs 6-8 run All-Gather; NPUs 3-5 belong to no group.
+    # NPUs 6-8 run All-Gather; NPUs 3-5 belong to no group. The two groups'
+    # conditions draw from one ChunkIds.split() family, so ids can't collide
+    # even though each builder gets its own allocator.
     topo = mesh2d(3, 3)
-    ids = ChunkIds()
-    v = all_to_allv([0, 1, 2], [[0, 2, 2], [1, 0, 1], [1, 1, 0]], ids=ids)
-    ag = all_gather([6, 7, 8], ids=ids, chunks_per_npu=2)
+    v_ids, ag_ids = ChunkIds().split(2)
+    v = all_to_allv([0, 1, 2], [[0, 2, 2], [1, 0, 1], [1, 1, 0]], ids=v_ids)
+    ag = all_gather([6, 7, 8], ids=ag_ids, chunks_per_npu=2)
     alg = synthesize_joint(topo, [("a2av", v), ("allgather", ag)])
     alg.validate()
     used = {t.src for t in alg.transfers} | {t.dst for t in alg.transfers}
@@ -35,13 +37,12 @@ def main():
     # same idea at pod scale: every row of an 8x8 pod slice runs its own
     # expert-parallel All-to-All (the MoE pattern), synthesized jointly
     pod = tpu_v5e_pod(8, 8)
-    ids = ChunkIds()
     from repro.core import all_to_all
 
     groups = []
-    for r in range(8):
+    for r, row_ids in enumerate(ChunkIds().split(8)):
         row = [r * 8 + c for c in range(8)]
-        groups.append((f"ep_row{r}", all_to_all(row, ids=ids, bytes=1.0)))
+        groups.append((f"ep_row{r}", all_to_all(row, ids=row_ids, bytes=1.0)))
     alg = synthesize_joint(pod, groups)
     alg.validate()
     print(f"\n8x8 pod, 8 concurrent EP All-to-All groups:")

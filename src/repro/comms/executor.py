@@ -70,42 +70,78 @@ class BufferPlan:
 
 
 def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
-    n = prog.num_devices
-    slot_of: dict[tuple[int, int], int] = {}
-    next_slot = [0] * n
+    """Assign per-device buffer slots and build per-round permute tables.
 
-    def ensure_slot(device: int, chunk: int) -> int:
-        key = (device, chunk)
-        if key not in slot_of:
-            slot_of[key] = next_slot[device]
-            next_slot[device] += 1
-        return slot_of[key]
+    Array-backed: slots live in a dense ``[num_devices, num_chunks]`` int32
+    matrix (-1 = unassigned) and every round's tables are filled with numpy
+    scatters over the round's send arrays, instead of per-send dict probes.
+    Slot numbering is identical to the historical per-transfer scan: initial
+    holders first (condition order), then receivers in round order — each
+    device appears at most once as a destination per round, so the
+    vectorized assignment order cannot collide. ``slot_of`` is materialized
+    once at the end for the primitives' lookup API.
+    """
+    n = prog.num_devices
+    chunks = sorted(prog.chunk_holders)
+    cidx = {c: k for k, c in enumerate(chunks)}
+    slot = np.full((n, len(chunks)), -1, dtype=np.int32)
+    next_slot = np.zeros(n, dtype=np.int32)
 
     # initial holders (sources; every contributor for reduced chunks)
     for chunk, holders in prog.chunk_holders.items():
+        k = cidx[chunk]
         for h in holders:
-            ensure_slot(h, chunk)
+            if slot[h, k] < 0:
+                slot[h, k] = next_slot[h]
+                next_slot[h] += 1
 
     rounds: list[RoundTables] = []
     for sends in prog.rounds:
-        perm = []
         send_slot = np.zeros(n, dtype=np.int32)
         recv_slot = np.zeros(n, dtype=np.int32)
         is_recv = np.zeros(n, dtype=bool)
         is_reduce = np.zeros(n, dtype=bool)
-        for s in sends:
-            if (s.src, s.chunk) not in slot_of:
-                raise AssertionError(
-                    f"send of chunk {s.chunk} from device {s.src} before arrival"
-                )
-            perm.append((s.src, s.dst))
-            send_slot[s.src] = slot_of[(s.src, s.chunk)]
-            recv_slot[s.dst] = ensure_slot(s.dst, s.chunk)
-            is_recv[s.dst] = True
-            is_reduce[s.dst] = s.reduce
-        rounds.append(RoundTables(perm, send_slot, recv_slot, is_recv, is_reduce))
+        if not sends:
+            rounds.append(RoundTables([], send_slot, recv_slot, is_recv,
+                                      is_reduce))
+            continue
+        m = len(sends)
+        src = np.fromiter((s.src for s in sends), np.int64, m)
+        dst = np.fromiter((s.dst for s in sends), np.int64, m)
+        red = np.fromiter((s.reduce for s in sends), bool, m)
+        try:
+            ck = np.fromiter((cidx[s.chunk] for s in sends), np.int64, m)
+        except KeyError:
+            bad = next(s for s in sends if s.chunk not in cidx)
+            raise AssertionError(
+                f"send of chunk {bad.chunk} from device {bad.src} "
+                f"before arrival"
+            ) from None
+        ssl = slot[src, ck]
+        if (ssl < 0).any():
+            bad = sends[int(np.argmax(ssl < 0))]
+            raise AssertionError(
+                f"send of chunk {bad.chunk} from device {bad.src} "
+                f"before arrival"
+            )
+        need = slot[dst, ck] < 0
+        # destinations are unique within a ppermute round, so the scattered
+        # slot grants cannot collide
+        slot[dst[need], ck[need]] = next_slot[dst[need]]
+        next_slot[dst[need]] += 1
+        send_slot[src] = ssl
+        recv_slot[dst] = slot[dst, ck]
+        is_recv[dst] = True
+        is_reduce[dst] = red
+        perm = list(zip(src.tolist(), dst.tolist()))
+        rounds.append(RoundTables(perm, send_slot, recv_slot, is_recv,
+                                  is_reduce))
 
-    num_slots = max(next_slot) if n else 0
+    num_slots = int(next_slot.max()) if n else 0
+    devs, ks = np.nonzero(slot >= 0)
+    slot_of = {
+        (int(d), chunks[k]): int(slot[d, k]) for d, k in zip(devs, ks)
+    }
     plan = BufferPlan(n, num_slots, slot_of, rounds)
     # route non-receivers' ppermute zeros into the trash slot
     for rt in plan.rounds:

@@ -14,6 +14,7 @@ checks every invariant the synthesizer promises:
 
 from __future__ import annotations
 
+import operator
 from collections import defaultdict
 from dataclasses import dataclass, field
 
@@ -23,7 +24,7 @@ from repro.topology.topology import Topology
 _EPS = 1e-6
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class Transfer:
     """Chunk moves src -> dst over `link` during [start, end)."""
 
@@ -49,7 +50,9 @@ class CollectiveAlgorithm:
     name: str = "pccl"
 
     def __post_init__(self):
-        self.transfers = sorted(self.transfers, key=lambda t: (t.start, t.chunk, t.link))
+        self.transfers = sorted(
+            self.transfers, key=operator.attrgetter("start", "chunk", "link")
+        )
 
     @property
     def makespan(self) -> float:

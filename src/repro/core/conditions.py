@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field, replace
+from functools import cached_property
 
 
 @dataclass(frozen=True)
@@ -31,11 +32,12 @@ class Condition:
     tag: str = ""
 
     def __post_init__(self):
-        object.__setattr__(self, "dests", frozenset(self.dests))
+        if type(self.dests) is not frozenset:
+            object.__setattr__(self, "dests", frozenset(self.dests))
         if not self.dests:
             raise ValueError(f"chunk {self.chunk}: empty destination set")
 
-    @property
+    @cached_property
     def remote_dests(self) -> frozenset[int]:
         return self.dests - {self.src}
 
@@ -61,13 +63,32 @@ class ReduceCondition:
 
 class ChunkIds:
     """Dense unique chunk-id allocator, shared across process groups so that a
-    joint synthesis over several concurrent collectives never aliases chunks."""
+    joint synthesis over several concurrent collectives never aliases chunks.
+
+    ``split()`` hands out child allocators that draw from the *same*
+    underlying counter, so independent condition builders (one per process
+    group) can be composed into a joint synthesis without hand-threading a
+    single allocator through every call site — the classic collision footgun
+    that ``SynthesisEngine.synthesize_joint`` rejects with a ``ValueError``.
+    """
 
     def __init__(self, start: int = 0):
         self._counter = itertools.count(start)
 
     def next(self) -> int:
         return next(self._counter)
+
+    def split(self, k: int = 2) -> "list[ChunkIds]":
+        """``k`` child allocators sharing this allocator's counter: ids drawn
+        from any child (or from ``self``) are globally unique."""
+        if k < 1:
+            raise ValueError(f"cannot split into {k} allocators")
+        children = []
+        for _ in range(k):
+            child = ChunkIds.__new__(ChunkIds)
+            child._counter = self._counter
+            children.append(child)
+        return children
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,8 @@ import heapq
 from dataclasses import replace
 from typing import Callable, Sequence
 
+import numpy as np
+
 from repro.core import conditions as cnd
 from repro.core.algorithm import CollectiveAlgorithm, Transfer
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
@@ -48,6 +50,17 @@ class _DistanceCache:
         self.homog = topo.homogeneous()
         self._cache: dict = {}
 
+    def _hops_from(self, src: int) -> "list[float]":
+        """Hop distances from one source, served from the topology's shared
+        all-pairs matrix (one C-level sweep) when scipy is available."""
+        topo = self.topo
+        matrix = topo.hop_matrix()
+        if matrix is not None:
+            return matrix[src].tolist()
+        dn = topo.hop_distances_np(src).astype(float)
+        dn[dn < 0] = float("inf")
+        return dn.tolist()
+
     def dist(self, src: int, chunk_bytes: float) -> list[float]:
         key = (src, None if self.homog else chunk_bytes)
         got = self._cache.get(key)
@@ -55,8 +68,7 @@ class _DistanceCache:
             return got
         topo = self.topo
         if self.homog:
-            d = [float(x) for x in topo.hop_distances_from(src)]
-            d = [x if x >= 0 else float("inf") for x in d]
+            d = self._hops_from(src)
         else:
             d = [float("inf")] * topo.num_nodes
             d[src] = 0.0
@@ -102,14 +114,62 @@ class SynthesisEngine:
         self.registry = registry
         self._distances = _DistanceCache(topology)
         self._rev_topo: Topology | None = None
+        # reusable per-topology state: {id(topo): (topo, TEN)} — the forward
+        # and reversed views in practice. TENs are reset() per synthesis
+        # instead of reallocated; distance caches persist across calls.
+        self._tens: dict[int, tuple[Topology, TEN]] = {}
+        self._dist_caches: dict[int, tuple[Topology, _DistanceCache]] = {
+            id(topology): (topology, self._distances)
+        }
 
     # -- lifecycle pieces ---------------------------------------------------
 
+    def _ten_for(self, topo: Topology) -> TEN:
+        ent = self._tens.get(id(topo))
+        if ent is None or ent[0] is not topo:
+            ent = (topo, TEN(topo))
+            self._tens[id(topo)] = ent
+        ten = ent[1]
+        ten.reset()
+        return ten
+
+    def _dist_cache_for(self, topo: Topology) -> _DistanceCache:
+        ent = self._dist_caches.get(id(topo))
+        if ent is None or ent[0] is not topo:
+            ent = (topo, _DistanceCache(topo))
+            self._dist_caches[id(topo)] = ent
+        return ent[1]
+
     def order_conditions(self, conds: list[Condition]) -> list[Condition]:
-        cache = self._distances
-        return sorted(
-            conds, key=lambda c: (-cache.condition_dist(c), -c.bytes, c.chunk)
+        return self._order(self._distances, conds)
+
+    @staticmethod
+    def _order(cache: _DistanceCache, conds: list[Condition]) -> list[Condition]:
+        """Sort by (-max shortest-path distance, -bytes, chunk), stable.
+
+        Distances come from one (cached, vectorized) pass per source; the
+        composite sort key is evaluated in bulk with a numpy lexsort instead
+        of a per-condition ``condition_dist`` call inside ``sorted``."""
+        nc = len(conds)
+        if nc <= 1:
+            return list(conds)
+        dist_key = np.empty(nc)
+        bytes_key = np.empty(nc)
+        chunk_key = np.empty(nc, dtype=np.int64)
+        for k, c in enumerate(conds):
+            d = cache.dist(c.src, c.bytes)
+            rd = c.remote_dests
+            if len(rd) == 1:
+                (x,) = rd
+                dist_key[k] = d[x]
+            else:
+                dist_key[k] = max((d[x] for x in rd), default=0.0)
+            bytes_key[k] = c.bytes
+            chunk_key[k] = c.chunk
+        order = np.lexsort(
+            (np.arange(nc), chunk_key, -bytes_key, -dist_key)
         )
+        return [conds[k] for k in order]
 
     def _use_int_mode(self, conds: list[Condition]) -> bool:
         topo = self.topology
@@ -124,9 +184,19 @@ class SynthesisEngine:
         link = topo.links[0] if topo.links else None
         return link is None or link.transfer_time(b0) == 1.0
 
+    @staticmethod
+    def _fast_int_commit(topo: Topology, int_mode: bool) -> bool:
+        """True when the commit needs no switch bookkeeping (the single
+        predicate behind both the per-call hoist in ``synthesize`` and the
+        fallback in ``_commit``)."""
+        return int_mode and not topo.csr().any_switch
+
     def _commit(self, ten: TEN, result: PathResult, int_mode: bool) -> None:
         # occupy links of retained paths only (paper Fig. 6e / Fig. 7)
         topo = ten.topology
+        if self._fast_int_commit(topo, int_mode):
+            ten.commit_int_many(result.transfers)
+            return
         last_send_end: dict[int, float] = {}
         for t in result.transfers:
             if int_mode:
@@ -164,7 +234,7 @@ class SynthesisEngine:
         conflicts). ``topology`` overrides the engine's topology for internal
         reversed-topology passes."""
         topo = topology or self.topology
-        ten = TEN(topo)
+        ten = self._ten_for(topo)
         int_mode = mode == "int" or (mode == "auto" and self._use_int_mode(conds))
         if preload is not None:
             for t in preload.transfers:
@@ -173,17 +243,16 @@ class SynthesisEngine:
                 else:
                     ten.commit(t.link, t.start, t.end)
 
-        if topo is self.topology:
-            ordered = self.order_conditions(conds)
-        else:
-            cache = _DistanceCache(topo)
-            ordered = sorted(
-                conds, key=lambda c: (-cache.condition_dist(c), -c.bytes, c.chunk)
-            )
+        ordered = self._order(self._dist_cache_for(topo), conds)
         transfers: list[Transfer] = []
+        search = bfs_int if int_mode else bfs_cont
+        fast_commit = self._fast_int_commit(topo, int_mode)
         for c in ordered:
-            result: PathResult = bfs_int(ten, c) if int_mode else bfs_cont(ten, c)
-            self._commit(ten, result, int_mode)
+            result: PathResult = search(ten, c)
+            if fast_commit:
+                ten.commit_int_many(result.transfers)
+            else:
+                self._commit(ten, result, int_mode)
             transfers.extend(result.transfers)
         return CollectiveAlgorithm(topo, list(conds), transfers, name=name)
 

@@ -39,6 +39,12 @@ from repro.topology.topology import Topology
 # the cap only matters for pathological generator sets)
 _MAX_AUTOMORPHISMS = 4096
 
+# Cache-key schema version, part of every fingerprint (memory and disk).
+# Bump whenever the synthesis core changes in a way that could alter emitted
+# schedules, so plans cached by an older core are never served by a newer
+# one. v2: array-backed TEN + batched-frontier BFS core.
+SCHEMA_VERSION = 2
+
 
 # ---------------------------------------------------------------------------
 # Topology structure hashing and automorphism handling
@@ -265,7 +271,8 @@ class AlgorithmRegistry:
     @staticmethod
     def _key(topo: Topology, kind: str, canon: tuple[int, ...],
              params: tuple) -> tuple:
-        return (topology_fingerprint(topo), kind, canon, params)
+        return (SCHEMA_VERSION, topology_fingerprint(topo), kind, canon,
+                params)
 
     @staticmethod
     def fingerprint(topo: Topology, kind: str, group: Sequence[int],

@@ -50,7 +50,10 @@ class SimResult:
         width = self.makespan / bins
         busy = [0.0] * bins
         for t in self.transfers:
-            b0 = int(t.start / width)
+            # clamp both ends: a transfer starting exactly at the makespan
+            # (e.g. a replayed schedule whose last transfer has zero slack)
+            # would otherwise index bin `bins`
+            b0 = min(int(t.start / width), bins - 1)
             b1 = min(int((t.end - 1e-12) / width), bins - 1)
             for b in range(b0, b1 + 1):
                 lo = max(t.start, b * width)

@@ -1,19 +1,29 @@
-"""Time-Expanded Network (paper §2.6, §4.2).
+"""Time-Expanded Network (paper §2.6, §4.2) — array-backed.
 
 The TEN fuses spatial topology with time. The paper presents it as a boolean
 matrix ``TEN[t][s][d]`` for unit-timestep (homogeneous) networks, generalized
 to alpha-beta continuous times for heterogeneous ones (paper §4.6, Fig. 9-10).
 
-We implement one structure covering both: every physical link carries a sorted
-list of *busy intervals* committed by previously synthesized conditions. For a
-homogeneous network with uniform chunk size this degenerates to the paper's
-integer-timestep TEN (every interval is [k, k+1)), and a fast integer path is
-provided. "Removing TEN links" (paper Fig. 7/10) = committing a busy interval:
-any other chunk overlapping it is excluded, which is exactly the paper's rule
-that a TEN link is occupied by at most one chunk.
+One structure covers both modes:
 
-Switches (paper §4.7) additionally carry residency intervals (chunks buffered)
-used to enforce finite buffer limits during pathfinding.
+* **Integer fast path** (homogeneous, uniform chunk size): per-link occupancy
+  is a growable numpy bitmap ``_bits[num_links, horizon]`` — exactly the
+  paper's boolean TEN with the (src, dst) axis collapsed onto physical link
+  ids.  ``busy_row``/``free_mask`` expose whole-timestep occupancy slices for
+  vectorized frontier expansion, and a per-link Python-int mirror
+  (``_masks``) answers the scalar hot-loop queries — ``free_int`` and the
+  next-free-slot search in :func:`repro.core.pathfinding.bfs_int` — in a few
+  word operations (``(~m) & (m + 1)`` isolates the lowest free slot).
+* **Continuous intervals** (heterogeneous, §4.6): every link carries sorted
+  disjoint busy intervals; "removing TEN links" (paper Fig. 7/10) =
+  committing a busy interval.
+
+TENs are reusable: :meth:`reset` clears all occupancy in O(allocated) without
+reallocating, so :class:`repro.core.engine.SynthesisEngine` keeps one TEN per
+topology across collectives instead of constructing one per call.
+
+Switches (paper §4.7) additionally carry residency intervals (chunks
+buffered) used to enforce finite buffer limits during pathfinding.
 """
 
 from __future__ import annotations
@@ -21,9 +31,12 @@ from __future__ import annotations
 import bisect
 from collections import defaultdict
 
+import numpy as np
+
 from repro.topology.topology import Topology
 
 _EPS = 1e-9
+_INITIAL_HORIZON = 64
 
 
 class TEN:
@@ -35,11 +48,33 @@ class TEN:
         ]
         # per-switch committed chunk-residency intervals
         self._residency: dict[int, list[tuple[float, float]]] = defaultdict(list)
-        # integer fast path: per-link set of occupied unit timesteps
-        self._busy_int: list[set[int]] = [set() for _ in range(topology.num_links)]
+        # integer fast path: [num_links, capacity] occupancy bitmap plus a
+        # per-link int mirror (bit t set = timestep t busy) for scalar queries
+        self._cap = _INITIAL_HORIZON
+        self._bits = np.zeros((topology.num_links, self._cap), dtype=bool)
+        self._masks: list[int] = [0] * topology.num_links
+        # bit_length of each mask, mirrored so the pathfinding inner loop
+        # replaces a method call with a list index
+        self._mask_bl: list[int] = [0] * topology.num_links
         # latest committed busy end, maintained incrementally by commit/
         # commit_int so horizon() is O(1) instead of rescanning every link
         self._horizon: float = 0.0
+
+    def reset(self) -> None:
+        """Clear all committed occupancy, keeping allocations. Re-syncs with
+        the topology if links were added since construction."""
+        n = self.topology.num_links
+        if n != len(self._masks):
+            self._busy = [[] for _ in range(n)]
+            self._bits = np.zeros((n, self._cap), dtype=bool)
+        else:
+            for iv in self._busy:
+                iv.clear()
+            self._bits[:] = False
+        self._masks = [0] * n
+        self._mask_bl = [0] * n
+        self._residency.clear()
+        self._horizon = 0.0
 
     # ------------------------------------------------------------------
     # Continuous (heterogeneous) interface — paper §4.6
@@ -75,20 +110,71 @@ class TEN:
     # Integer fast path (homogeneous, uniform chunk size) — paper §4.2
     # ------------------------------------------------------------------
     def free_int(self, link: int, t: int) -> bool:
-        return t not in self._busy_int[link]
+        return not (self._masks[link] >> t) & 1
 
     def earliest_free_int(self, link: int, t: int) -> int:
-        busy = self._busy_int[link]
-        while t in busy:
-            t += 1
-        return t
+        """First timestep >= t with the link free: lowest zero bit of the
+        occupancy mask at or above t."""
+        m = self._masks[link] >> t
+        low_zero = ~m & (m + 1)
+        return t + low_zero.bit_length() - 1
 
     def commit_int(self, link: int, t: int) -> None:
-        if t in self._busy_int[link]:
+        if (self._masks[link] >> t) & 1:
             raise AssertionError(f"link {link}: timestep {t} already occupied")
-        self._busy_int[link].add(t)
+        if t >= self._cap:
+            self._grow(t)
+        self._bits[link, t] = True
+        m = self._masks[link] | (1 << t)
+        self._masks[link] = m
+        self._mask_bl[link] = m.bit_length()
         if t + 1 > self._horizon:
             self._horizon = float(t + 1)
+
+    def commit_int_many(self, transfers) -> None:
+        """Bulk ``commit_int`` for a pruned path's transfers (one call per
+        condition instead of one per transfer)."""
+        masks = self._masks
+        mask_bl = self._mask_bl
+        bits = self._bits
+        hi = self._horizon
+        for tr in transfers:
+            link = tr.link
+            t = int(tr.start)
+            if (masks[link] >> t) & 1:
+                raise AssertionError(
+                    f"link {link}: timestep {t} already occupied"
+                )
+            if t >= self._cap:
+                self._grow(t)
+                bits = self._bits
+            bits[link, t] = True
+            m = masks[link] | (1 << t)
+            masks[link] = m
+            mask_bl[link] = m.bit_length()
+            if t + 1 > hi:
+                hi = float(t + 1)
+        self._horizon = hi
+
+    def _grow(self, t: int) -> None:
+        new_cap = max(self._cap * 2, t + 1)
+        bits = np.zeros((self.topology.num_links, new_cap), dtype=bool)
+        bits[:, : self._cap] = self._bits
+        self._bits = bits
+        self._cap = new_cap
+
+    # -- vectorized occupancy views -------------------------------------
+    def busy_row(self, t: int) -> np.ndarray:
+        """Occupancy of every link at timestep ``t`` (bool[num_links])."""
+        if t >= self._cap:
+            return np.zeros(self.topology.num_links, dtype=bool)
+        return self._bits[:, t]
+
+    def free_mask(self, links: np.ndarray, t: int) -> np.ndarray:
+        """Per-link freedom at timestep ``t`` for an int array of link ids."""
+        if t >= self._cap:
+            return np.ones(len(links), dtype=bool)
+        return ~self._bits[links, t]
 
     # ------------------------------------------------------------------
     # Switch residency (buffer limits) — paper §4.7

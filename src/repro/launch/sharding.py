@@ -267,6 +267,36 @@ class MeshCollectivePlanner:
         group = self.axis_groups(axis)[group_index]
         return getattr(self.engine, kind)(group, bytes=nbytes, **kw)
 
+    def joint(self, parts, *, name: str = "pccl_joint"):
+        """Jointly synthesize several mesh-axis collectives over one shared
+        TEN (paper §6.4): ``parts`` is a list of ``(kind, axis, group_index)``
+        or ``(kind, axis, group_index, nbytes)``. Chunk ids are drawn from
+        one ``ChunkIds.split()`` family, so the condition builders cannot
+        collide — previously every caller had to hand-thread one allocator.
+
+        Only non-reduction kinds are supported (reductions synthesize via a
+        reversed topology and cannot share this TEN).
+        """
+        from repro.core import conditions as cnd
+        from repro.core.conditions import ChunkIds
+
+        builders = {"all_gather": cnd.all_gather, "all_to_all": cnd.all_to_all}
+        norm = [(p if len(p) == 4 else (*p, 1.0)) for p in parts]
+        ids = ChunkIds()
+        groups = []
+        for child, (kind, axis, group_index, nbytes) in zip(
+                ids.split(len(norm)), norm):
+            builder = builders.get(kind)
+            if builder is None:
+                raise ValueError(
+                    f"joint synthesis supports {sorted(builders)}, "
+                    f"got {kind!r}"
+                )
+            group = self.axis_groups(axis)[group_index]
+            conds = builder(group, ids=child, bytes=nbytes)
+            groups.append((f"{kind}_{axis}{group_index}", conds))
+        return self.engine.synthesize_joint(groups, name=name)
+
     def warm(self, kinds=("all_gather", "reduce_scatter"), *,
              nbytes: float = 1.0) -> dict:
         """Pre-populate the registry for every axis/kind; returns stats.

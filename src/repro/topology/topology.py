@@ -13,6 +13,15 @@ from __future__ import annotations
 import enum
 from dataclasses import dataclass, field
 
+import numpy as np
+
+try:  # scipy serves all-pairs hop distances in one C sweep when present;
+    # imported at module load so the cost never lands inside a timed region
+    from scipy.sparse import csr_matrix as _sp_csr_matrix
+    from scipy.sparse.csgraph import shortest_path as _sp_shortest_path
+except ImportError:  # pragma: no cover - scipy ships in the image
+    _sp_csr_matrix = _sp_shortest_path = None
+
 
 class NodeType(enum.Enum):
     NPU = "npu"
@@ -45,6 +54,33 @@ class Link:
         return self.alpha + chunk_bytes * self.beta
 
 
+@dataclass(frozen=True)
+class CSRAdjacency:
+    """Cached array export of the out-adjacency, in ``out_links`` order.
+
+    Edge ``e`` of node ``u`` lives at positions ``indptr[u] .. indptr[u+1]``;
+    ``link_ids[e]``/``dst_ids[e]`` are the link id and head node. The numpy
+    arrays drive vectorized passes (frontier masks, distance sweeps); the
+    plain-list mirrors (`adj`, `is_switch`, `serial_switch`) serve the scalar
+    hot loops in :mod:`repro.core.pathfinding`, where list indexing beats
+    numpy scalar indexing by ~3x.
+    """
+
+    indptr: np.ndarray  # [num_nodes + 1] int32
+    link_ids: np.ndarray  # [num_links] int32
+    dst_ids: np.ndarray  # [num_links] int32
+    src_ids: np.ndarray  # [num_links] int32 (edge -> tail node)
+    # scalar mirrors for the pathfinding hot loop
+    adj: tuple  # adj[u] = ((edge_idx, dst, link_id), ...)
+    edge_dst: tuple  # per-edge head node
+    edge_src: tuple  # per-edge tail node
+    edge_link: tuple  # per-edge link id
+    is_switch: tuple  # per-node bool
+    serial_switch: tuple  # per-node bool: switch and not multicast
+    limited_switches: tuple  # node ids of switches with a buffer_limit
+    any_switch: bool
+
+
 class Topology:
     """Directed multigraph with O(1) adjacency lookups.
 
@@ -70,7 +106,8 @@ class Topology:
         """Drop memoized derived state (structure hash, automorphism closure,
         attached synthesis engines) when the graph mutates."""
         for attr in ("_structure_hash", "_automorphism_closure",
-                     "_pccl_engines"):
+                     "_pccl_engines", "_csr_cache", "_rev_dist_rows",
+                     "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache"):
             if hasattr(self, attr):
                 delattr(self, attr)
 
@@ -140,20 +177,132 @@ class Topology:
         a0, b0 = self.links[0].alpha, self.links[0].beta
         return all(l.alpha == a0 and l.beta == b0 for l in self.links)
 
+    # -- array adjacency ---------------------------------------------------
+    def csr(self) -> CSRAdjacency:
+        """The cached :class:`CSRAdjacency` export (rebuilt on mutation)."""
+        cached = getattr(self, "_csr_cache", None)
+        if cached is not None:
+            return cached
+        n = self.num_nodes
+        indptr = np.zeros(n + 1, dtype=np.int32)
+        link_ids = np.empty(self.num_links, dtype=np.int32)
+        dst_ids = np.empty(self.num_links, dtype=np.int32)
+        src_ids = np.empty(self.num_links, dtype=np.int32)
+        adj = []
+        e = 0
+        for u in range(n):
+            rows = []
+            for link in self._out[u]:
+                link_ids[e] = link.id
+                dst_ids[e] = link.dst
+                src_ids[e] = u
+                rows.append((e, link.dst, link.id))
+                e += 1
+            indptr[u + 1] = e
+            adj.append(tuple(rows))
+        is_switch = tuple(nd.type is NodeType.SWITCH for nd in self.nodes)
+        serial = tuple(
+            is_switch[nd.id] and not nd.multicast for nd in self.nodes
+        )
+        limited = tuple(
+            nd.id for nd in self.nodes
+            if is_switch[nd.id] and nd.buffer_limit is not None
+        )
+        cached = CSRAdjacency(
+            indptr, link_ids, dst_ids, src_ids, tuple(adj),
+            tuple(int(x) for x in dst_ids),
+            tuple(int(x) for x in src_ids),
+            tuple(int(x) for x in link_ids),
+            is_switch, serial, limited, any(is_switch),
+        )
+        self._csr_cache = cached
+        return cached
+
     # -- distances ---------------------------------------------------------
     def hop_distances_from(self, src: int) -> list[int]:
         """Unweighted BFS hop distance from src to all nodes (-1 = unreachable)."""
-        dist = [-1] * self.num_nodes
+        return self.hop_distances_np(src).tolist()
+
+    def hop_distances_np(self, src: int) -> np.ndarray:
+        """Vectorized hop distances from ``src`` (int32, -1 = unreachable):
+        one numpy frontier sweep per BFS level over the CSR arrays."""
+        csr = self.csr()
+        dist = np.full(self.num_nodes, -1, dtype=np.int32)
         dist[src] = 0
-        frontier = [src]
+        frontier = np.array([src], dtype=np.int32)
+        d = 0
+        indptr, dst_ids = csr.indptr, csr.dst_ids
+        while frontier.size:
+            starts = indptr[frontier]
+            counts = indptr[frontier + 1] - starts
+            total = int(counts.sum())
+            if not total:
+                break
+            owner = np.repeat(np.arange(frontier.size), counts)
+            offsets = np.arange(total) - np.repeat(
+                np.cumsum(counts) - counts, counts
+            )
+            nbrs = dst_ids[starts[owner] + offsets]
+            nbrs = np.unique(nbrs[dist[nbrs] < 0])
+            d += 1
+            dist[nbrs] = d
+            frontier = nbrs.astype(np.int32)
+        return dist
+
+    def hop_matrix(self):
+        """All-pairs hop-distance matrix ``D[i, j] = hops i -> j`` (float,
+        inf = unreachable), computed in one scipy C sweep and cached — the
+        single source for both from-source rows (condition ordering) and
+        to-destination columns (the pathfinding heuristic). Returns ``None``
+        when scipy is unavailable or the graph has no links."""
+        cached = getattr(self, "_hop_matrix_cache", None)
+        if cached is None:
+            if _sp_shortest_path is not None and self.num_links:
+                csr = self.csr()
+                n = self.num_nodes
+                graph = _sp_csr_matrix(
+                    (np.ones(len(csr.dst_ids)),
+                     (csr.src_ids, csr.dst_ids)),
+                    shape=(n, n),
+                )
+                cached = (_sp_shortest_path(graph, method="D",
+                                            unweighted=True),)
+            else:
+                cached = (False,)
+            self._hop_matrix_cache = cached
+        matrix = cached[0]
+        return None if matrix is False else matrix
+
+    def hop_distances_to(self, dst: int) -> list[int]:
+        """Hop distance from every node to ``dst`` over directed links
+        (reverse BFS), cached per destination — the admissible heuristic
+        used by the pathfinding search bound. Served from the shared
+        all-pairs matrix when available."""
+        rows = getattr(self, "_rev_dist_rows", None)
+        if rows is None:
+            rows = self._rev_dist_rows = {}
+        got = rows.get(dst)
+        if got is not None:
+            return got
+        matrix = self.hop_matrix()
+        if matrix is not None:
+            col = matrix[:, dst]
+            dist = [-1 if x == float("inf") else int(x) for x in col]
+            rows[dst] = dist
+            return dist
+        dist = [-1] * self.num_nodes
+        dist[dst] = 0
+        frontier = [dst]
         while frontier:
             nxt = []
-            for u in frontier:
-                for link in self._out[u]:
-                    if dist[link.dst] < 0:
-                        dist[link.dst] = dist[u] + 1
-                        nxt.append(link.dst)
+            for x in frontier:
+                dx1 = dist[x] + 1
+                for link in self._in[x]:
+                    if dist[link.src] < 0:
+                        dist[link.src] = dx1
+                        nxt.append(link.src)
             frontier = nxt
+        rows[dst] = dist
         return dist
 
     def reversed(self) -> "Topology":

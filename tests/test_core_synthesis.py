@@ -144,6 +144,24 @@ class TestConditionBuilders:
         chunks = [c.chunk for c in a + b]
         assert len(set(chunks)) == len(chunks)
 
+    def test_chunkids_split_shares_counter(self):
+        parent = ChunkIds()
+        c1, c2 = parent.split(2)
+        ids = [c1.next(), c2.next(), parent.next(), c1.next()]
+        assert ids == sorted(set(ids)), "split allocators must never collide"
+
+    def test_chunkids_split_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            ChunkIds().split(0)
+
+    def test_joint_with_split_allocators(self):
+        topo = mesh2d(3, 3)
+        v_ids, ag_ids = ChunkIds().split(2)
+        v = all_to_all([0, 1, 2], ids=v_ids)
+        ag = all_gather([6, 7, 8], ids=ag_ids)
+        alg = synthesize_joint(topo, [("a2a", v), ("ag", ag)])
+        alg.validate()
+
     def test_ordering_longest_first(self):
         topo = ring(8)
         conds = all_to_all(list(range(8)))

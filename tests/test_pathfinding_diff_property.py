@@ -1,0 +1,128 @@
+"""Randomized differential tests: the event-frontier ``bfs_int`` equals
+``bfs_int_ref`` on random topologies — optionally with (serialized /
+buffer-limited) switches — and random pre-committed TEN state.
+
+Cases are generated from a ``random.Random`` seed, so the same generator
+serves two harnesses: hypothesis drives the seed space (with its database
+and shrinking) when installed, and a fixed seed sweep runs otherwise — the
+differential gate never silently skips. Deterministic topology-class
+coverage lives in test_pathfinding_diff.py.
+"""
+
+import random
+
+import pytest
+
+from repro.core.conditions import Condition
+from repro.core.pathfinding import bfs_int, bfs_int_ref
+from repro.core.ten import TEN
+from repro.topology.topology import NodeType, Topology
+
+from tests.test_pathfinding_diff import assert_same
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _gen_case(rng: random.Random, switches: bool, max_npus: int = 7):
+    n = rng.randint(2, max_npus)
+    topo = Topology("diff")
+    topo.add_npus(n)
+    perm = list(range(n))
+    rng.shuffle(perm)
+    for i in range(n):  # ring backbone: strong connectivity
+        topo.add_link(perm[i], perm[(i + 1) % n])
+    for _ in range(rng.randint(0, 2 * n)):
+        u = rng.randrange(n)
+        v = rng.randrange(n)
+        if u != v and not any(l.dst == v for l in topo.out_links(u)):
+            topo.add_link(u, v)
+    if switches:
+        sw = topo.add_node(
+            NodeType.SWITCH,
+            buffer_limit=rng.choice([None, 1, 2]),
+            multicast=rng.random() < 0.5,
+        )
+        members = rng.sample(range(n), rng.randint(2, n))
+        for m in members:
+            topo.add_bidir_link(m, sw)
+
+    # random pre-committed integer occupancy (as if prior conditions ran)
+    ten = TEN(topo)
+    seen = set()
+    for _ in range(rng.randint(0, 4 * topo.num_links)):
+        link = rng.randrange(topo.num_links)
+        t = rng.randint(0, 12)
+        if (link, t) not in seen:
+            seen.add((link, t))
+            ten.commit_int(link, t)
+    # random switch residency intervals (buffer pressure)
+    for s in topo.switches:
+        for _ in range(rng.randint(0, 3)):
+            a = rng.randint(0, 8)
+            ten.commit_residency(s, float(a), float(a + rng.randint(1, 6)))
+
+    npus = topo.npus
+    src = rng.choice(npus)
+    dests = rng.sample(npus, rng.randint(1, len(npus)))
+    release = rng.choice([0, 0, 0, 2, 5])
+    cond = Condition(0, src, frozenset(dests), release=float(release))
+    return topo, ten, cond
+
+
+def _clone_ten(topo, ten):
+    clone = TEN(topo)
+    for link, mask in enumerate(ten._masks):
+        t = 0
+        m = mask
+        while m:
+            if m & 1:
+                clone.commit_int(link, t)
+            m >>= 1
+            t += 1
+    for s, intervals in ten._residency.items():
+        for a, b in intervals:
+            clone.commit_residency(s, a, b)
+    return clone
+
+
+def check_seed(seed: int, switches: bool) -> None:
+    topo, ten, cond = _gen_case(random.Random(seed), switches)
+    ten2 = _clone_ten(topo, ten)
+    try:
+        ra = bfs_int_ref(ten, cond)
+    except AssertionError as e:
+        with pytest.raises(AssertionError) as eb:
+            bfs_int(ten2, cond)
+        assert str(e) == str(eb.value)
+        return
+    rb = bfs_int(ten2, cond)
+    assert_same(ra, rb, ctx=f"seed={seed} switches={switches}")
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=150, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_homogeneous_differential(seed):
+        check_seed(seed, switches=False)
+
+    @settings(max_examples=150, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_switched_differential(seed):
+        check_seed(seed, switches=True)
+
+else:  # seed-sweep fallback: same generator, fixed seeds
+
+    @pytest.mark.parametrize("seed", range(0, 150))
+    def test_random_homogeneous_differential(seed):
+        check_seed(seed, switches=False)
+
+    @pytest.mark.parametrize("seed", range(1000, 1150))
+    def test_random_switched_differential(seed):
+        check_seed(seed, switches=True)

@@ -318,3 +318,22 @@ class TestMeshPlanner:
 
         with pytest.raises(ValueError):
             MeshCollectivePlanner(torus2d(4, 4), {"data": 4, "model": 8})
+
+    def test_joint_synthesis_split_allocators(self):
+        from repro.launch.sharding import MeshCollectivePlanner
+
+        pl = MeshCollectivePlanner(torus2d(4, 4), {"data": 4, "model": 4})
+        # two model-axis rows run different collectives over one shared TEN;
+        # chunk ids come from one ChunkIds.split() family (no collisions)
+        alg = pl.joint([("all_gather", "model", 0),
+                        ("all_to_all", "model", 2)])
+        alg.validate()
+        chunks = [c.chunk for c in alg.conditions]
+        assert len(set(chunks)) == len(chunks)
+
+    def test_joint_rejects_reductions(self):
+        from repro.launch.sharding import MeshCollectivePlanner
+
+        pl = MeshCollectivePlanner(torus2d(4, 4), {"data": 4, "model": 4})
+        with pytest.raises(ValueError):
+            pl.joint([("all_reduce", "model", 0)])

@@ -1,0 +1,33 @@
+"""Scale smoke tests (slow tier): the array-backed core must hold the
+paper's Fig. 11 trajectory — a 144-NPU mesh All-to-All synthesizes and
+validates inside a hard wall-clock budget. Run with ``pytest -m slow``
+(a non-blocking CI job does); the quick tier skips these.
+"""
+
+import time
+
+import pytest
+
+from repro.core.engine import SynthesisEngine
+from repro.topology import mesh2d
+
+# generous for CI-class machines: the reference loop needs ~15-20s for the
+# synthesis alone on a dev box, the event-frontier core ~3-4s
+_BUDGET_SECONDS = 120.0
+
+
+@pytest.mark.slow
+def test_mesh12x12_all_to_all_within_budget():
+    topo = mesh2d(12, 12)
+    n = 144
+    t0 = time.perf_counter()
+    alg = SynthesisEngine(topo).all_to_all(list(range(n)))
+    synth_s = time.perf_counter() - t0
+    alg.validate()
+    wall_s = time.perf_counter() - t0
+    assert len(alg.conditions) == n * (n - 1)
+    assert alg.makespan > 0
+    assert wall_s < _BUDGET_SECONDS, (
+        f"12x12 All-to-All took {wall_s:.1f}s (synthesis {synth_s:.1f}s), "
+        f"budget {_BUDGET_SECONDS}s — the scaling regression gate failed"
+    )

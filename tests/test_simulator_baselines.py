@@ -75,6 +75,24 @@ class TestSimulator:
         # unidirectional ring AG keeps every link busy the whole time
         assert timeline[0] == pytest.approx(1.0)
 
+    def test_busy_timeline_start_at_makespan(self):
+        # regression: a transfer starting exactly at the makespan used to
+        # index bin `bins` (IndexError); both bin indices must clamp.
+        from repro.core import SimResult, Transfer
+
+        res = SimResult(
+            makespan=4.0,
+            completion={0: 4.0, 1: 4.0},
+            link_busy={0: 4.0},
+            transfers=[
+                Transfer(0, 0, 0, 1, 0.0, 4.0),
+                Transfer(1, 1, 1, 2, 4.0, 4.0),  # starts at the makespan
+            ],
+        )
+        timeline = res.busy_timeline(num_links=2, bins=8)
+        assert len(timeline) == 8
+        assert all(0.0 <= x <= 1.0 + 1e-9 for x in timeline)
+
 
 class TestBaselines:
     def test_direct_a2a_mesh(self):
