@@ -1,0 +1,81 @@
+"""Hierarchical synthesis benchmarks (fig_hier_*): the ISSUE-3 scale gate.
+
+Three row families:
+
+* ``fig_hier_{ag,a2a}_<n>`` — cold hierarchical synthesis + full validation
+  on multi-pod fabrics (the ≥1024-NPU rows are the headline: flat synthesis
+  at that size is minutes-to-hours; hierarchical must land in seconds).
+  ``us_per_call`` is synthesis wall time; validation time rides in meta.
+* ``fig_hier_vs_flat_<kind>`` — simulated-makespan ratio hierarchical/flat
+  on a fabric small enough for flat synthesis (the <= 1.25x bound).
+* ``fig_hier_reuse`` — registry amortization: N isomorphic pods cost one
+  intra/scatter synthesis each.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import AlgorithmRegistry, SynthesisEngine
+from repro.topology import multi_pod
+
+
+def _cold_row(name: str, topo, kind: str) -> Row:
+    reg = AlgorithmRegistry()
+    eng = SynthesisEngine(topo, registry=reg)
+    alg, us = timed(getattr(eng, kind), topo.npus)
+    _, val_us = timed(alg.validate)
+    n = len(topo.npus)
+    return Row(
+        name, us,
+        f"npus={n};pods={topo.num_pods};makespan={alg.makespan};"
+        f"transfers={alg.num_transfers};validate_s={val_us / 1e6:.2f};"
+        f"total_s={(us + val_us) / 1e6:.2f};algo={alg.name}",
+    )
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+
+    # -- cold synthesis + validation at scale ------------------------------
+    # small pods minimize intra/scatter legs (see ISSUE-3 tuning): 64 pods
+    # of 4x4 beats 16 pods of 8x8 by ~2.5x wall-clock at 1024 NPUs
+    sizes = [(4, 4, 4, 4)]  # (pods, rows, cols, dci_ports) -> 64 NPUs
+    if full:
+        sizes += [(16, 4, 4, 4), (64, 4, 4, 4)]  # 256, 1024 NPUs
+    for pods, r, c, ports in sizes:
+        topo = multi_pod(pods, r, c, unit_links=True, dci_ports_per_pod=ports)
+        n = pods * r * c
+        rows.append(_cold_row(f"fig_hier_ag_{n}", topo, "all_gather"))
+        rows.append(_cold_row(f"fig_hier_a2a_{n}", topo, "all_to_all"))
+
+    # -- hierarchical vs flat makespan on a flat-feasible fabric -----------
+    topo = multi_pod(2, 4, 8, unit_links=True)
+    eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
+    for kind in ("all_gather", "all_to_all"):
+        hier, hier_us = timed(getattr(eng, kind), topo.npus)
+        flat, flat_us = timed(getattr(eng, kind), topo.npus,
+                              hierarchy="never")
+        hier.validate()
+        flat.validate()
+        rows.append(Row(
+            f"fig_hier_vs_flat_{kind}", hier_us,
+            f"npus=64;hier_makespan={hier.makespan};"
+            f"flat_makespan={flat.makespan};"
+            f"ratio={hier.makespan / flat.makespan:.3f};"
+            f"flat_synth_us={flat_us:.0f}",
+        ))
+
+    # -- per-pod plan amortization -----------------------------------------
+    pods = 8 if full else 4
+    topo = multi_pod(pods, 4, 4, unit_links=True, dci_ports_per_pod=4)
+    reg = AlgorithmRegistry()
+    eng = SynthesisEngine(topo, registry=reg)
+    alg, us = timed(eng.hierarchical().all_gather, topo.npus, pipeline=False)
+    alg.validate()
+    st = reg.stats.as_dict()
+    rows.append(Row(
+        "fig_hier_reuse", us,
+        f"pods={pods};misses={st['misses']};hits={st['hits']};"
+        f"makespan={alg.makespan}",
+    ))
+    return rows

@@ -58,6 +58,7 @@ def main() -> None:
     from benchmarks import (
         alltoall_bw,
         hetero_switch,
+        hierarchical,
         pg_sensitivity,
         process_group,
         registry_amortization,
@@ -75,6 +76,7 @@ def main() -> None:
         ("fig16", process_group),
         ("fig18", utilization),
         ("fig19", pg_sensitivity),
+        ("fig_hier", hierarchical),
         ("registry", registry_amortization),
         ("roofline", roofline),
     ]

@@ -25,8 +25,9 @@ def run(full: bool = False) -> list[Row]:
     cube = grid_hypercube(4 if full else 2, 3)
     nn = len(cube.npus)
     for chunks in chunk_counts:
+        # flat-path scaling row (hierarchical rows live in fig_hier_*)
         alg, us = timed(synthesize_all_to_all, cube, list(range(nn)),
-                        chunks_per_pair=chunks)
+                        chunks_per_pair=chunks, hierarchy="never")
         alg.validate()
         rows.append(Row(
             f"fig12_chunks_cube_{nn}_c{chunks}", us,

@@ -25,7 +25,10 @@ def run(full: bool = False) -> list[Row]:
     for side in cube_sides:
         topo = grid_hypercube(side, 3)
         n = side ** 3
-        alg, us = timed(synthesize_all_to_all, topo, list(range(n)))
+        # fig11 tracks *flat* synthesis scaling; grid_hypercube fabrics are
+        # partitioned now, so pin the flat path (fig_hier_* covers hierarchy)
+        alg, us = timed(synthesize_all_to_all, topo, list(range(n)),
+                        hierarchy="never")
         alg.validate()
         rows.append(Row(
             f"fig11_synthesis_cube{side}^3", us,

@@ -18,10 +18,16 @@ import operator
 from collections import defaultdict
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core.conditions import Condition, ReduceCondition
 from repro.topology.topology import Topology
 
 _EPS = 1e-6
+
+# transfer lists past this size sort via numpy lexsort (stable, same order
+# as sorted()); below it, plain sorted() wins on constant factors
+_VECTOR_SORT_MIN = 1 << 17
 
 
 @dataclass(frozen=True, slots=True)
@@ -48,11 +54,29 @@ class CollectiveAlgorithm:
     conditions: list  # list[Condition | ReduceCondition]
     transfers: list[Transfer] = field(default_factory=list)
     name: str = "pccl"
+    # Phase provenance for composed algorithms (hierarchical / PhasePlan
+    # synthesis): [(phase name, first start, last end)], in execution order.
+    # Purely descriptive — validation and replay never consult it.
+    phase_spans: list = field(default_factory=list)
 
     def __post_init__(self):
-        self.transfers = sorted(
-            self.transfers, key=operator.attrgetter("start", "chunk", "link")
-        )
+        ts = self.transfers
+        if len(ts) >= _VECTOR_SORT_MIN:
+            # same stable (start, chunk, link) order, bulk-keyed: million-
+            # transfer composed schedules sort in C instead of via
+            # attrgetter tuples
+            start = np.fromiter((t.start for t in ts), dtype=float,
+                                count=len(ts))
+            chunk = np.fromiter((t.chunk for t in ts), dtype=np.int64,
+                                count=len(ts))
+            link = np.fromiter((t.link for t in ts), dtype=np.int64,
+                               count=len(ts))
+            order = np.lexsort((link, chunk, start))
+            self.transfers = [ts[i] for i in order]
+        else:
+            self.transfers = sorted(
+                ts, key=operator.attrgetter("start", "chunk", "link")
+            )
 
     @property
     def makespan(self) -> float:
@@ -82,7 +106,150 @@ class CollectiveAlgorithm:
     # ------------------------------------------------------------------
     # Validation oracle
     # ------------------------------------------------------------------
-    def validate(self) -> None:
+    def validate(self, mode: str = "auto") -> None:
+        """Replay the schedule and check every synthesizer invariant.
+
+        ``mode="auto"`` dispatches million-transfer schedules of the
+        *unconstrained* class (no reductions, every switch unlimited and
+        multicast-capable) to a vectorized implementation of the same
+        checks — identical accept/reject behavior, enforced by the
+        differential tests in ``tests/test_validation_bulk.py`` — and
+        everything else to the reference oracle. ``"oracle"``/``"bulk"``
+        force a path."""
+        if mode not in ("auto", "oracle", "bulk"):
+            raise ValueError(f"mode={mode!r} not in auto/oracle/bulk")
+        if mode == "oracle":
+            return self._validate_oracle()
+        eligible = (
+            len(self.transfers) >= _VECTOR_SORT_MIN or mode == "bulk"
+        ) and self._bulk_validatable()
+        if mode == "bulk" and not eligible:
+            raise ValueError(
+                "bulk validation requires plain conditions and "
+                "unconstrained switches"
+            )
+        if eligible:
+            return self._validate_bulk()
+        return self._validate_oracle()
+
+    def _bulk_validatable(self) -> bool:
+        return (
+            all(type(c) is Condition for c in self.conditions)
+            and not any(t.reduce for t in self.transfers)
+            and all(n.buffer_limit is None and n.multicast
+                    for n in self.topology.nodes)
+        )
+
+    def _validate_bulk(self) -> None:
+        """Vectorized validation for plain-condition schedules on
+        unconstrained fabrics. Check-for-check equivalent to the oracle:
+        link endpoints and alpha-beta durations, adjacent-interval
+        congestion per link, release bounds, store-and-forward causality
+        (a chunk departs a node only at/after its earliest arrival there),
+        and post-condition delivery."""
+        topo = self.topology
+        ts = self.transfers
+        conds = self.conditions
+        n = len(ts)
+        chunk = np.fromiter((t.chunk for t in ts), np.int64, n)
+        link = np.fromiter((t.link for t in ts), np.int64, n)
+        src = np.fromiter((t.src for t in ts), np.int64, n)
+        dst = np.fromiter((t.dst for t in ts), np.int64, n)
+        start = np.fromiter((t.start for t in ts), float, n)
+        end = np.fromiter((t.end for t in ts), float, n)
+
+        if n and (link.min() < 0 or link.max() >= topo.num_links):
+            raise AssertionError("transfer references unknown link")
+        lsrc = np.fromiter((l.src for l in topo.links), np.int64,
+                           topo.num_links)
+        ldst = np.fromiter((l.dst for l in topo.links), np.int64,
+                           topo.num_links)
+        bad = (lsrc[link] != src) | (ldst[link] != dst)
+        if bad.any():
+            raise AssertionError(
+                f"{ts[int(bad.argmax())]} does not ride its link")
+
+        cchunk = np.fromiter((c.chunk for c in conds), np.int64, len(conds))
+        uchunks, cidx = np.unique(cchunk, return_index=True)
+        if len(uchunks) != len(conds):
+            raise AssertionError("duplicate chunk id in conditions")
+        pos = np.searchsorted(uchunks, chunk)
+        if n and ((pos >= len(uchunks)) | (uchunks[np.minimum(
+                pos, len(uchunks) - 1)] != chunk)).any():
+            raise AssertionError("transfer moves unknown chunk")
+        csize = np.fromiter((c.bytes for c in conds), float, len(conds))
+        crel = np.fromiter((c.release for c in conds), float, len(conds))
+        corigin = np.fromiter((c.src for c in conds), np.int64, len(conds))
+        sizes = csize[cidx][pos] if n else csize[:0]
+        rel = crel[cidx][pos] if n else crel[:0]
+        origin = corigin[cidx][pos] if n else corigin[:0]
+
+        alpha = np.fromiter((l.alpha for l in topo.links), float,
+                            topo.num_links)
+        beta = np.fromiter((l.beta for l in topo.links), float,
+                           topo.num_links)
+        want = alpha[link] + sizes * beta[link]
+        bad = np.abs((end - start) - want) > _EPS
+        if bad.any():
+            k = int(bad.argmax())
+            raise AssertionError(
+                f"{ts[k]}: duration {end[k] - start[k]} != alpha-beta "
+                f"time {want[k]}")
+
+        # congestion: per link, adjacent intervals in start order
+        order = np.lexsort((start, link))
+        ls, ss, es = link[order], start[order], end[order]
+        same = ls[1:] == ls[:-1]
+        overlap = same & (ss[1:] < es[:-1] - _EPS) & (ss[:-1] < es[1:] - _EPS)
+        if overlap.any():
+            k = int(overlap.argmax())
+            raise AssertionError(
+                f"congestion on link {ls[k]}: {ts[int(order[k])]} vs "
+                f"{ts[int(order[k + 1])]}")
+
+        if (start < rel - _EPS).any():
+            k = int((start < rel - _EPS).argmax())
+            raise AssertionError(f"{ts[k]}: starts before chunk release")
+
+        # earliest arrival per (chunk, node), origins at release
+        nn = topo.num_nodes
+        akey = pos * nn + dst
+        ukey, inv = np.unique(akey, return_inverse=True)
+        amin = np.full(len(ukey), np.inf)
+        np.minimum.at(amin, inv, end)
+
+        if len(ukey):
+            skey = pos * nn + src
+            sloc = np.minimum(np.searchsorted(ukey, skey), len(ukey) - 1)
+            found = ukey[sloc] == skey
+            arr = np.where(found, amin[sloc], np.inf)
+            arr = np.where(src == origin, np.minimum(arr, rel), arr)
+            bad = start < arr - _EPS
+            if bad.any():
+                k = int(bad.argmax())
+                raise AssertionError(
+                    f"{ts[k]}: departs before chunk arrived "
+                    f"(arr={arr[k] if np.isfinite(arr[k]) else None})")
+
+        # post-conditions: every destination reached (or holds from origin)
+        pk, pd = [], []
+        for ci, c in enumerate(conds):
+            for d in c.dests:
+                pk.append(ci)
+                pd.append(d)
+        pk = np.asarray(pk, np.int64)
+        pd = np.asarray(pd, np.int64)
+        got = pd == corigin[pk]
+        if len(ukey):
+            dkey = np.searchsorted(uchunks, cchunk[pk]) * nn + pd
+            dloc = np.minimum(np.searchsorted(ukey, dkey), len(ukey) - 1)
+            got |= ukey[dloc] == dkey
+        if not got.all():
+            k = int((~got).argmax())
+            raise AssertionError(
+                f"chunk {conds[pk[k]].chunk} never reached NPU {pd[k]}")
+
+    def _validate_oracle(self) -> None:
         topo = self.topology
         sizes = {c.chunk: c.bytes for c in self.conditions}
         releases = {c.chunk: c.release for c in self.conditions}

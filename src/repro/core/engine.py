@@ -20,7 +20,7 @@ for backward compatibility; new code should hold a ``SynthesisEngine``.
 from __future__ import annotations
 
 import heapq
-from dataclasses import replace
+from dataclasses import dataclass, replace
 from typing import Callable, Sequence
 
 import numpy as np
@@ -32,6 +32,52 @@ from repro.core.pathfinding import PathResult, bfs_cont, bfs_int
 from repro.core.registry import renumber_chunks
 from repro.core.ten import TEN
 from repro.topology.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# Phase composition (generalizes the old ad-hoc ``preload`` hack)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PhaseSpec:
+    """One phase of a composed synthesis, on one global clock.
+
+    A phase either carries ``conds`` to synthesize (releases are absolute
+    times — ``after``/``start`` only raise them) or a pre-synthesized
+    ``algorithm`` whose transfers are already absolutely timed. Phases may
+    run on a sub-topology: ``node_map``/``link_map`` translate local ids
+    back into the composing engine's fabric (see
+    :meth:`repro.topology.topology.Topology.pod_subtopology`), and
+    ``chunk_map`` renumbers phase-local chunk ids into the final
+    condition set's ids.
+
+    ``preload_from`` names earlier phases on the *same* topology object
+    whose transfers are committed into this phase's TEN before searching, so
+    time-overlapping phases stay congestion-free — the mechanism behind
+    pipelined All-Reduce and pipelined hierarchical scatter phases.
+    """
+
+    name: str
+    conds: list[Condition] | None = None
+    algorithm: CollectiveAlgorithm | None = None
+    topology: Topology | None = None  # None = the engine's fabric
+    node_map: Sequence[int] | None = None  # local node -> global node
+    link_map: Sequence[int] | None = None  # local link -> global link
+    chunk_map: dict[int, int] | None = None  # local chunk -> global chunk
+    after: tuple[str, ...] = ()  # release floor: ends of these phases
+    start: float = 0.0  # extra absolute release floor
+    preload_from: tuple[str, ...] = ()
+    mode: str = "auto"
+    replicate: bool = False  # enable the path-replication fast path
+
+
+@dataclass
+class PhasePlan:
+    """Ordered phases + the overall conditions the stitched result fulfils."""
+
+    phases: list[PhaseSpec]
+    conditions: list  # list[Condition | ReduceCondition]
+    name: str = "pccl_phased"
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +160,7 @@ class SynthesisEngine:
         self.registry = registry
         self._distances = _DistanceCache(topology)
         self._rev_topo: Topology | None = None
+        self._hier = None  # lazy HierarchicalSynthesizer
         # reusable per-topology state: {id(topo): (topo, TEN)} — the forward
         # and reversed views in practice. TENs are reset() per synthesis
         # instead of reallocated; distance caches persist across calls.
@@ -121,6 +168,11 @@ class SynthesisEngine:
         self._dist_caches: dict[int, tuple[Topology, _DistanceCache]] = {
             id(topology): (topology, self._distances)
         }
+        # fixed-route scheduling state: canonical (src, dest) routes (found
+        # by BFS on an empty TEN, memoized). Keyed by object id but guarded
+        # by identity — the entry pins (topo, empty TEN, route table), so a
+        # recycled id can never serve a stale topology's routes.
+        self._route_tens: dict[int, tuple[Topology, TEN, dict]] = {}
 
     # -- lifecycle pieces ---------------------------------------------------
 
@@ -144,18 +196,35 @@ class SynthesisEngine:
         return self._order(self._distances, conds)
 
     @staticmethod
-    def _order(cache: _DistanceCache, conds: list[Condition]) -> list[Condition]:
+    def _order(cache: _DistanceCache, conds: list[Condition],
+               group_runs: bool = False) -> list[Condition]:
         """Sort by (-max shortest-path distance, -bytes, chunk), stable.
 
         Distances come from one (cached, vectorized) pass per source; the
         composite sort key is evaluated in bulk with a numpy lexsort instead
-        of a per-condition ``condition_dist`` call inside ``sorted``."""
+        of a per-condition ``condition_dist`` call inside ``sorted``.
+
+        ``group_runs`` additionally breaks distance ties by (src, dest,
+        release) so identical conditions land adjacent — the precondition
+        for the path-replication fast path in :meth:`synthesize`. Algorithm 3
+        only prescribes the distance ordering, so tie-break choice does not
+        affect correctness.
+
+        Release-bearing condition sets (composed phases, pipelined
+        All-Reduce) tie-break by ascending release before chunk id —
+        schedule what is ready first; for the uniform-release sets of plain
+        collectives every release is equal, so flat synthesis order is
+        byte-identical to the historical one."""
         nc = len(conds)
         if nc <= 1:
             return list(conds)
         dist_key = np.empty(nc)
         bytes_key = np.empty(nc)
         chunk_key = np.empty(nc, dtype=np.int64)
+        rel_key = np.empty(nc)
+        if group_runs:
+            src_key = np.empty(nc, dtype=np.int64)
+            dest_key = np.empty(nc, dtype=np.int64)
         for k, c in enumerate(conds):
             d = cache.dist(c.src, c.bytes)
             rd = c.remote_dests
@@ -166,13 +235,24 @@ class SynthesisEngine:
                 dist_key[k] = max((d[x] for x in rd), default=0.0)
             bytes_key[k] = c.bytes
             chunk_key[k] = c.chunk
-        order = np.lexsort(
-            (np.arange(nc), chunk_key, -bytes_key, -dist_key)
-        )
+            rel_key[k] = c.release
+            if group_runs:
+                src_key[k] = c.src
+                dest_key[k] = min(c.dests)
+        if group_runs:
+            order = np.lexsort(
+                (np.arange(nc), chunk_key, rel_key, dest_key, src_key,
+                 -bytes_key, -dist_key)
+            )
+        else:
+            order = np.lexsort(
+                (np.arange(nc), chunk_key, rel_key, -bytes_key, -dist_key)
+            )
         return [conds[k] for k in order]
 
-    def _use_int_mode(self, conds: list[Condition]) -> bool:
-        topo = self.topology
+    def _use_int_mode(self, conds: list[Condition],
+                      topo: Topology | None = None) -> bool:
+        topo = topo or self.topology
         if not topo.homogeneous() or not conds:
             return False
         b0 = conds[0].bytes
@@ -188,8 +268,14 @@ class SynthesisEngine:
     def _fast_int_commit(topo: Topology, int_mode: bool) -> bool:
         """True when the commit needs no switch bookkeeping (the single
         predicate behind both the per-call hoist in ``synthesize`` and the
-        fallback in ``_commit``)."""
-        return int_mode and not topo.csr().any_switch
+        fallback in ``_commit``). Switch residency intervals exist solely to
+        enforce buffer limits during later searches, so unlimited-buffer
+        switches (the common DCI/spine case) take the bulk path too —
+        emitted schedules are unchanged, only dead bookkeeping is skipped."""
+        if not int_mode:
+            return False
+        csr = topo.csr()
+        return not csr.any_switch or not csr.limited_switches
 
     def _commit(self, ten: TEN, result: PathResult, int_mode: bool) -> None:
         # occupy links of retained paths only (paper Fig. 6e / Fig. 7)
@@ -228,14 +314,36 @@ class SynthesisEngine:
         mode: str = "auto",
         name: str = "pccl",
         topology: Topology | None = None,
+        replicate: bool = False,
     ) -> CollectiveAlgorithm:
         """Paper Algorithm 3 over a fresh TEN. ``preload``'s transfers are
         committed first (used to compose All-Reduce phases without link
         conflicts). ``topology`` overrides the engine's topology for internal
-        reversed-topology passes."""
+        reversed-topology passes.
+
+        ``replicate=True`` enables the bulk-traffic fast paths, active only
+        in integer mode on fabrics where link occupancy is the sole
+        constraint (no buffer-limited and no serial switches):
+
+        * single-destination conditions take *fixed-route scheduling* — the
+          (src, dest) route is searched once on an empty TEN and memoized;
+          every chunk then rides it with per-hop earliest-free waits. Bulk
+          flows wait in queue instead of detouring, which keeps transfer
+          counts at the hop-distance minimum (an earliest-arrival search
+          under deep congestion detours, and a thousand-chunk run would
+          replicate the detour a thousand times).
+        * runs of identical multi-destination conditions reuse the first
+          instance's searched tree shifted to the next free time slots,
+          falling back to a full search when shifting fails.
+
+        Schedules stay valid by construction (the oracle re-checks
+        everything) and the default-off flag keeps flat synthesis
+        byte-stable."""
         topo = topology or self.topology
         ten = self._ten_for(topo)
-        int_mode = mode == "int" or (mode == "auto" and self._use_int_mode(conds))
+        int_mode = mode == "int" or (
+            mode == "auto" and self._use_int_mode(conds, topo)
+        )
         if preload is not None:
             for t in preload.transfers:
                 if int_mode:
@@ -243,18 +351,111 @@ class SynthesisEngine:
                 else:
                     ten.commit(t.link, t.start, t.end)
 
-        ordered = self._order(self._dist_cache_for(topo), conds)
+        repl = replicate and int_mode and self._replication_safe(topo)
+        ordered = self._order(self._dist_cache_for(topo), conds,
+                              group_runs=repl)
         transfers: list[Transfer] = []
         search = bfs_int if int_mode else bfs_cont
         fast_commit = self._fast_int_commit(topo, int_mode)
+        prev_key = None
+        prev: PathResult | None = None
         for c in ordered:
-            result: PathResult = search(ten, c)
+            result: PathResult | None = None
+            if repl:
+                rd = c.remote_dests
+                if len(rd) == 1:
+                    result = self._fixed_route_schedule(ten, topo, c,
+                                                        next(iter(rd)))
+                else:
+                    key = (c.src, c.dests, c.bytes, c.release)
+                    if key == prev_key and prev is not None and prev.transfers:
+                        result = self._shift_result(ten, prev, c)
+                    if result is None:
+                        result = search(ten, c)
+                    prev_key, prev = key, result
+            else:
+                result = search(ten, c)
             if fast_commit:
                 ten.commit_int_many(result.transfers)
             else:
                 self._commit(ten, result, int_mode)
             transfers.extend(result.transfers)
         return CollectiveAlgorithm(topo, list(conds), transfers, name=name)
+
+    def _route_for(self, topo: Topology, src: int, dest: int) -> tuple:
+        """The canonical (src -> dest) hop sequence ((link, u, v), ...):
+        what BFS finds on an uncongested TEN, memoized per topology."""
+        ent = self._route_tens.get(id(topo))
+        if ent is None or ent[0] is not topo:
+            ent = (topo, TEN(topo), {})
+            self._route_tens[id(topo)] = ent
+        routes = ent[2]
+        route = routes.get((src, dest))
+        if route is None:
+            found = bfs_int(ent[1], Condition(0, src, frozenset([dest])))
+            route = tuple((t.link, t.src, t.dst) for t in found.transfers)
+            routes[(src, dest)] = route
+        return route
+
+    def _fixed_route_schedule(self, ten: TEN, topo: Topology, c: Condition,
+                              dest: int) -> PathResult:
+        """Schedule one chunk along its memoized route with per-hop
+        earliest-free waits (store-and-forward causality by construction)."""
+        t = int(c.release)
+        transfers = []
+        arrivals = {c.src: float(t)}
+        free = ten.earliest_free_int
+        chunk = c.chunk
+        for link, u, v in self._route_for(topo, c.src, dest):
+            t = free(link, t)
+            transfers.append(Transfer(chunk, link, u, v, float(t),
+                                      float(t + 1)))
+            t += 1
+            arrivals[v] = float(t)
+        return PathResult(transfers, arrivals, {dest: float(t)})
+
+    @staticmethod
+    def _replication_safe(topo: Topology) -> bool:
+        """Path replication reasons about link occupancy only; switches with
+        buffer limits or serialized egress add constraints a shifted path
+        could violate, so those fabrics always take the full search."""
+        return not topo.csr().constrained_switch
+
+    @staticmethod
+    def _shift_result(ten: TEN, base: PathResult,
+                      c: Condition) -> PathResult | None:
+        """Re-place ``base``'s path for the identical condition ``c`` by a
+        uniform time shift onto free slots.
+
+        The minimal feasible shift is a fixpoint of per-link next-free-slot
+        queries (each O(1) on the occupancy masks); a uniform shift preserves
+        store-and-forward causality and the release bound, so the result
+        needs no re-validation. Returns None when no fixpoint is found within
+        the iteration budget (the caller falls back to BFS)."""
+        ts = base.transfers
+        k = 1
+        for _ in range(64):
+            k2 = k
+            for t in ts:
+                s = int(t.start) + k2
+                free = ten.earliest_free_int(t.link, s)
+                if free != s:
+                    k2 += free - s
+            if k2 == k:
+                break
+            k = k2
+        else:
+            return None
+        kf = float(k)
+        chunk = c.chunk
+        transfers = [
+            Transfer(chunk, t.link, t.src, t.dst, t.start + kf, t.end + kf,
+                     t.reduce)
+            for t in ts
+        ]
+        arrivals = {n: a + kf for n, a in base.arrivals.items()}
+        reached = {n: a + kf for n, a in base.reached.items()}
+        return PathResult(transfers, arrivals, reached)
 
     def synthesize_joint(
         self,
@@ -277,6 +478,136 @@ class SynthesisEngine:
             seen.add(c.chunk)
         return self.synthesize(all_conds, name=name)
 
+    # -- phase composition --------------------------------------------------
+
+    def synthesize_plan(self, plan: PhasePlan) -> CollectiveAlgorithm:
+        """Synthesize and stitch an ordered :class:`PhasePlan` into one
+        algorithm on the engine's fabric.
+
+        Phases share one absolute clock. For each phase, the release floor is
+        ``max(start, end of every phase in after)``; phases carrying raw
+        conditions are synthesized on their (sub-)topology with that floor
+        folded into every condition's release, then lifted into global
+        coordinates through ``node_map``/``link_map``/``chunk_map``. The
+        result's conditions are ``plan.conditions`` — the caller's statement
+        of what the composition achieves end to end — and ``phase_spans``
+        records per-phase provenance. Congestion-freedom across phases comes
+        from either disjoint link sets, disjoint time windows, or explicit
+        ``preload_from``; the stitched algorithm still passes the full
+        validation oracle, which checks all of it from scratch.
+        """
+        ends: dict[str, float] = {}
+        local_algs: dict[str, CollectiveAlgorithm] = {}
+        shifts: dict[str, float] = {}
+        topos: dict[str, Topology] = {}
+        merged: list[Transfer] = []
+        spans: list[tuple[str, float, float]] = []
+        for ph in plan.phases:
+            if ph.name in ends:
+                raise ValueError(f"duplicate phase name {ph.name!r}")
+            if (ph.conds is None) == (ph.algorithm is None):
+                raise ValueError(
+                    f"phase {ph.name!r}: exactly one of conds/algorithm"
+                )
+            topo = ph.topology or self.topology
+            floor = ph.start
+            for dep in ph.after:
+                if dep not in ends:
+                    raise ValueError(
+                        f"phase {ph.name!r} depends on unknown/later phase "
+                        f"{dep!r}"
+                    )
+                floor = max(floor, ends[dep])
+            shift = 0.0
+            if ph.algorithm is not None:
+                # Pre-synthesized phases are canonically timed (their clock
+                # starts at 0, which is what makes them cacheable across
+                # isomorphic pods); the floor shifts them into place.
+                alg = ph.algorithm
+                shift = floor
+            else:
+                conds = ph.conds
+                if floor > 0.0:
+                    conds = [
+                        c if c.release >= floor else replace(c, release=floor)
+                        for c in conds
+                    ]
+                preload = None
+                if ph.preload_from:
+                    pre: list[Transfer] = []
+                    for dep in ph.preload_from:
+                        if dep not in local_algs:
+                            raise ValueError(
+                                f"phase {ph.name!r} preloads unknown phase "
+                                f"{dep!r}"
+                            )
+                        if topos[dep] is not topo:
+                            raise ValueError(
+                                f"phase {ph.name!r} preloads {dep!r} which "
+                                f"ran on a different topology"
+                            )
+                        # occupy the dependency's *effective* window: its
+                        # local transfers plus whatever floor shifted it
+                        ds = shifts[dep]
+                        if ds == 0.0:
+                            pre.extend(local_algs[dep].transfers)
+                        else:
+                            pre.extend(
+                                replace(t, start=t.start + ds,
+                                        end=t.end + ds)
+                                for t in local_algs[dep].transfers
+                            )
+                    preload = CollectiveAlgorithm(topo, [], pre,
+                                                  name="preload")
+                alg = self.synthesize(
+                    conds, preload=preload, mode=ph.mode,
+                    name=f"{plan.name}/{ph.name}", topology=topo,
+                    replicate=ph.replicate,
+                )
+            local_algs[ph.name] = alg
+            shifts[ph.name] = shift
+            topos[ph.name] = topo
+            lifted = self._lift(alg.transfers, ph, topo, shift)
+            merged.extend(lifted)
+            t_lo = min((t.start for t in lifted), default=floor)
+            t_hi = max((t.end for t in lifted), default=floor)
+            ends[ph.name] = max(t_hi, floor)
+            spans.append((ph.name, t_lo, t_hi))
+        return CollectiveAlgorithm(
+            self.topology, list(plan.conditions), merged, name=plan.name,
+            phase_spans=spans,
+        )
+
+    def _lift(self, transfers: list[Transfer], ph: PhaseSpec,
+              topo: Topology, shift: float = 0.0) -> list[Transfer]:
+        """Translate one phase's transfers into global coordinates, shifted
+        ``shift`` later (phases given as canonical pre-timed algorithms)."""
+        cm = ph.chunk_map or {}
+        if topo is self.topology:
+            if ph.node_map is not None or ph.link_map is not None:
+                raise ValueError(
+                    f"phase {ph.name!r}: node/link maps only apply to "
+                    f"sub-topology phases"
+                )
+            if not cm and shift == 0.0:
+                return list(transfers)
+            return [
+                replace(t, chunk=cm.get(t.chunk, t.chunk),
+                        start=t.start + shift, end=t.end + shift)
+                for t in transfers
+            ]
+        if ph.node_map is None or ph.link_map is None:
+            raise ValueError(
+                f"phase {ph.name!r}: sub-topology phases need node_map and "
+                f"link_map to lift into {self.topology.name}"
+            )
+        nm, lm = ph.node_map, ph.link_map
+        return [
+            Transfer(cm.get(t.chunk, t.chunk), lm[t.link], nm[t.src],
+                     nm[t.dst], t.start + shift, t.end + shift, t.reduce)
+            for t in transfers
+        ]
+
     # -- registry routing ---------------------------------------------------
 
     def _routed(
@@ -297,31 +628,79 @@ class SynthesisEngine:
             self.topology, kind, group, synth, params=params, ids=ids
         )
 
+    # -- hierarchical routing ----------------------------------------------
+
+    def hierarchical(self):
+        """The engine's :class:`repro.core.hierarchy.HierarchicalSynthesizer`
+        (built lazily; shares this engine's TENs, distance caches, and
+        registry)."""
+        if self._hier is None:
+            from repro.core.hierarchy import HierarchicalSynthesizer
+
+            self._hier = HierarchicalSynthesizer(self)
+        return self._hier
+
+    def _route_hierarchical(self, hierarchy: str, group) -> bool:
+        """Resolve a ``hierarchy`` policy ("auto"/"always"/"never") for one
+        group: "auto" takes the hierarchical path exactly when the fabric is
+        partitioned and the group spans pods."""
+        if hierarchy == "never" or self.topology.partition is None:
+            return False
+        if hierarchy == "always":
+            return True
+        if hierarchy != "auto":
+            raise ValueError(f"hierarchy={hierarchy!r} not in auto/always/never")
+        return self.hierarchical().spans_pods(group)
+
     # -- named collectives --------------------------------------------------
 
     def all_gather(
         self, group: Sequence[int], *, bytes: float = 1.0,
         chunks_per_npu: int = 1, ids: ChunkIds | None = None,
+        hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
+        use_hier = self._route_hierarchical(hierarchy, group)
+
         def synth(g: list[int]) -> CollectiveAlgorithm:
+            if use_hier:
+                from repro.core.hierarchy import HierarchyError
+
+                try:
+                    return self.hierarchical().all_gather(
+                        g, bytes=bytes, chunks_per_npu=chunks_per_npu)
+                except HierarchyError:
+                    if hierarchy == "always":
+                        raise
             conds = cnd.all_gather(g, ids=ChunkIds(), bytes=bytes,
                                    chunks_per_npu=chunks_per_npu)
             return self.synthesize(conds, name="pccl_all_gather")
 
         return self._routed("all_gather", group, synth,
-                            params=(bytes, chunks_per_npu), ids=ids)
+                            params=(bytes, chunks_per_npu, use_hier), ids=ids)
 
     def all_to_all(
         self, group: Sequence[int], *, bytes: float = 1.0,
         chunks_per_pair: int = 1, ids: ChunkIds | None = None,
+        hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
+        use_hier = self._route_hierarchical(hierarchy, group)
+
         def synth(g: list[int]) -> CollectiveAlgorithm:
+            if use_hier:
+                from repro.core.hierarchy import HierarchyError
+
+                try:
+                    return self.hierarchical().all_to_all(
+                        g, bytes=bytes, chunks_per_pair=chunks_per_pair)
+                except HierarchyError:
+                    if hierarchy == "always":
+                        raise
             conds = cnd.all_to_all(g, ids=ChunkIds(), bytes=bytes,
                                    chunks_per_pair=chunks_per_pair)
             return self.synthesize(conds, name="pccl_all_to_all")
 
         return self._routed("all_to_all", group, synth,
-                            params=(bytes, chunks_per_pair), ids=ids)
+                            params=(bytes, chunks_per_pair, use_hier), ids=ids)
 
     def reduce(
         self, group: Sequence[int], root: int, *, bytes: float = 1.0,
@@ -411,10 +790,12 @@ class SynthesisEngine:
     def _all_reduce_impl(
         self, group: list[int], *, bytes: float = 1.0, pipelined: bool = False,
     ) -> CollectiveAlgorithm:
-        """All-Reduce = Reduce-Scatter then All-Gather (paper §4.5). Each NPU
-        in the group owns one shard-chunk. With ``pipelined=True``
-        (beyond-paper), each chunk's All-Gather is released at that chunk's
-        Reduce-Scatter completion instead of the global makespan."""
+        """All-Reduce = Reduce-Scatter then All-Gather (paper §4.5), composed
+        as a two-phase :class:`PhasePlan`. Each NPU in the group owns one
+        shard-chunk. With ``pipelined=True`` (beyond-paper), each chunk's
+        All-Gather is released at that chunk's Reduce-Scatter completion
+        instead of the global makespan; ``preload_from`` keeps the
+        overlapping phases congestion-free on the shared links."""
         rs = self._reduce_scatter_impl(group, bytes=bytes)
         # per-chunk completion time of the reduce-scatter phase
         owner = {c.chunk: next(iter(c.dests)) for c in rs.conditions}
@@ -434,13 +815,18 @@ class SynthesisEngine:
             )
             for c in rs.conditions
         ]
-        ag = self.synthesize(ag_conds, preload=rs, name="pccl_all_reduce")
         ar_conds = [
             ReduceCondition(c.chunk, frozenset(group), frozenset(group),
                             bytes=bytes)
             for c in rs.conditions
         ]
-        return CollectiveAlgorithm(
-            self.topology, ar_conds, rs.transfers + ag.transfers,
+        plan = PhasePlan(
+            phases=[
+                PhaseSpec("reduce_scatter", algorithm=rs),
+                PhaseSpec("all_gather", conds=ag_conds,
+                          preload_from=("reduce_scatter",)),
+            ],
+            conditions=ar_conds,
             name="pccl_all_reduce",
         )
+        return self.synthesize_plan(plan)

@@ -1,0 +1,700 @@
+"""Hierarchical synthesis pipeline for partitioned (multi-pod) fabrics.
+
+Flat PCCL synthesis re-pays the full time-expanded-network cost for every
+isomorphic pod of a multi-pod fabric, which is what keeps 1k+ NPU fabrics
+out of reach. This module exploits the partition metadata on
+:class:`repro.topology.topology.Topology` (TACCL-style: sketch the
+intra-/inter-pod split, synthesize each piece) to decompose a collective
+into phases:
+
+* **intra phases** — one per pod, synthesized on the pod's small
+  sub-topology. Conditions are expressed in pod-local coordinates with
+  pod-locally assigned gateways, so every structurally-identical pod
+  produces the same sub-problem: the :class:`AlgorithmRegistry` (keyed by
+  the sub-topology fingerprint + a condition-signature hash) pays one
+  synthesis for N isomorphic pods.
+* **an inter phase** — synthesized on the boundary sub-topology (boundary
+  links, shared switches, gateway NPUs), moving each chunk between its
+  egress and ingress gateways.
+* **scatter phases** — one per pod, delivering arrived remote chunks to the
+  pod's group members; registry-shared like the intra phases.
+
+The phases are stitched by :meth:`SynthesisEngine.synthesize_plan` into one
+:class:`CollectiveAlgorithm` on the full fabric that the validation oracle,
+``replay_algorithm``, and the differential suites accept unchanged.
+
+Two pipelining regimes:
+
+* **pipelined** (small fabrics, boundary links disjoint from pod links):
+  inter conditions release per-chunk at the chunk's gateway arrival, and
+  scatter phases overlap their pod's intra phase safely by preloading its
+  transfers into the shared sub-TEN — makespans land close to flat
+  synthesis.
+* **sequential** (default at scale, or when the boundary fabric shares
+  links with pod fabrics): phases execute back-to-back, every per-pod plan
+  is canonically timed from 0 and therefore registry-shareable across pods
+  and across runs.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core import conditions as cnd
+from repro.core.algorithm import CollectiveAlgorithm
+from repro.core.conditions import ChunkIds, Condition
+from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine
+from repro.topology.topology import Topology, TopologyView
+
+# pipeline="auto" pipelines fabrics up to this many group members; larger
+# groups prefer the sequential regime, whose per-pod plans are
+# registry-shareable (one synthesis for N pods) at the cost of phase
+# barriers.
+_AUTO_PIPELINE_MAX_GROUP = 256
+
+
+class HierarchyError(ValueError):
+    """The group/fabric cannot take the hierarchical path (no partition,
+    single pod, missing gateways, unreachable pods). Callers fall back to
+    flat synthesis."""
+
+
+def _dests_local(view: TopologyView, nodes) -> frozenset[int]:
+    to_local = view.to_local
+    return frozenset(to_local[n] for n in nodes)
+
+
+def _uniform_singletons(conds: list[Condition]) -> bool:
+    """True when every condition is single-destination with equal
+    (bytes, release, tag) — bulk All-to-All phase shape, eligible for the
+    vectorized canonicalize/signature paths."""
+    c0 = conds[0]
+    b0, r0, t0 = c0.bytes, c0.release, c0.tag
+    return all(
+        len(c.dests) == 1 and c.bytes == b0 and c.release == r0
+        and c.tag == t0
+        for c in conds
+    )
+
+
+def _signature(conds: list[Condition]) -> str:
+    """Stable hash of a phase-local condition multiset — the registry cache
+    key component that distinguishes condition patterns on equal-fingerprint
+    sub-topologies. Bulk uniform-singleton phases hash a packed numpy view
+    of the same information (domain-tagged so the two encodings can never
+    collide)."""
+    h = hashlib.sha256()
+    if len(conds) > 4096 and _uniform_singletons(conds):
+        c0 = conds[0]
+        h.update(repr(("bulk1", c0.bytes, c0.release, c0.tag)).encode())
+        arr = np.fromiter(
+            (v for c in conds for v in (c.chunk, c.src, next(iter(c.dests)))),
+            dtype=np.int64, count=3 * len(conds),
+        )
+        h.update(arr.tobytes())
+        return h.hexdigest()
+    for c in conds:
+        h.update(repr((c.chunk, c.src, tuple(sorted(c.dests)), c.bytes,
+                       c.release, c.tag)).encode())
+    return h.hexdigest()
+
+
+def _arrivals(transfers) -> dict[tuple[int, int], float]:
+    """(chunk, node) -> earliest arrival end time."""
+    arr: dict[tuple[int, int], float] = {}
+    for t in transfers:
+        key = (t.chunk, t.dst)
+        got = arr.get(key)
+        if got is None or t.end < got:
+            arr[key] = t.end
+    return arr
+
+
+def _canonicalize_phase(conds: list[Condition]) -> tuple[list[Condition],
+                                                         dict[int, int]]:
+    """Sort a phase's conditions into a pod-invariant order and renumber
+    chunks densely from 0.
+
+    Phase builders iterate the overall condition list, whose order is
+    pod-dependent (pod 0's sources meet their same-pod destinations first,
+    later pods meet cross-pod destinations first), so positional chunk ids
+    would make byte-identical pod sub-problems hash differently and defeat
+    registry sharing. Sorting by the condition content itself — (src, dests,
+    bytes, release, tag), ties keeping build order — makes isomorphic pods
+    produce literally equal condition lists. Returns the canonical local
+    conditions and the local -> global chunk map."""
+    n = len(conds)
+    if n > 4096 and _uniform_singletons(conds):
+        src = np.fromiter((c.src for c in conds), dtype=np.int64, count=n)
+        dst = np.fromiter((next(iter(c.dests)) for c in conds),
+                          dtype=np.int64, count=n)
+        order = np.lexsort((np.arange(n), dst, src))
+    else:
+        order = sorted(
+            range(n),
+            key=lambda k: (conds[k].src, tuple(sorted(conds[k].dests)),
+                           conds[k].bytes, conds[k].release, conds[k].tag, k),
+        )
+    local = [
+        Condition(i, conds[k].src, conds[k].dests, conds[k].bytes,
+                  conds[k].release, conds[k].tag)
+        for i, k in enumerate(order)
+    ]
+    cmap = {i: conds[k].chunk for i, k in enumerate(order)}
+    return local, cmap
+
+
+@dataclass
+class _PodCtx:
+    """Per-pod derived state: the sub-topology view and gateway geometry."""
+
+    pod: int
+    view: TopologyView
+    gateways: list[int]  # global ids
+    gateways_local: list[int]  # local ids, same order
+
+
+class HierarchicalSynthesizer:
+    """Drives the partition-aware synthesis pipeline over one fabric.
+
+    Holds one :class:`SynthesisEngine` (whose per-topology TEN/distance
+    caches serve every pod's sub-problem) and, when the engine carries a
+    registry, shares canonical per-pod sub-plans through it.
+    """
+
+    def __init__(self, engine: SynthesisEngine):
+        self.engine = engine
+        self.topology = engine.topology
+        self.registry = engine.registry
+        self._pods: dict[int, _PodCtx] = {}
+        self._bview: TopologyView | None = None
+        self._bdist: dict[int, list[int]] = {}  # bsub-local src -> dist row
+        self._pod_dist_to_gw: dict[tuple[int, int], list[int]] = {}
+        self._pod_dist_from_gw: dict[tuple[int, int], list[int]] = {}
+        self._reach_cache: dict[tuple[int, int], list] = {}
+        self._ingress_cache: dict[tuple[int, int], int] = {}
+        # All-to-All gateway selection: "aligned" cycles pod-pair-aligned
+        # gateway pairs (few distinct inter endpoints, longest replication
+        # runs), "nearest" routes via the gateways closest to each
+        # source/destination (shortest intra legs, fewest transfers),
+        # "auto" picks nearest on dense boundary fabrics and falls back
+        # per-chunk where only aligned gateways are reachable.
+        self.gateway_strategy = "auto"
+
+    # -- eligibility --------------------------------------------------------
+
+    def spans_pods(self, group) -> bool:
+        """True iff the fabric is partitioned and ``group`` crosses a pod
+        boundary with every member assigned to a pod."""
+        part = self.topology.partition
+        if part is None:
+            return False
+        pods = {part[m] for m in group}
+        return -1 not in pods and len(pods) > 1
+
+    def _require(self, group) -> list[int]:
+        if not self.spans_pods(group):
+            raise HierarchyError(
+                f"group does not span pods of {self.topology.name}"
+            )
+        part = self.topology.partition
+        involved = sorted({part[m] for m in group})
+        for p in involved:
+            if not self.topology.gateways(p):
+                raise HierarchyError(f"pod {p} has no gateway NPUs")
+        return involved
+
+    # -- derived geometry ---------------------------------------------------
+
+    def _pod(self, p: int) -> _PodCtx:
+        ctx = self._pods.get(p)
+        if ctx is None:
+            view = self.topology.pod_subtopology(p)
+            gws = self.topology.gateways(p)
+            ctx = _PodCtx(p, view, gws, [view.to_local[g] for g in gws])
+            self._pods[p] = ctx
+        return ctx
+
+    def _boundary(self) -> TopologyView:
+        if self._bview is None:
+            self._bview = self.topology.boundary_subtopology()
+        return self._bview
+
+    def _bdist_row(self, src_local: int) -> list[int]:
+        """Hop distances from one bsub-local node over the boundary fabric."""
+        row = self._bdist.get(src_local)
+        if row is None:
+            sub = self._boundary().topology
+            matrix = sub.hop_matrix()
+            if matrix is not None:
+                row = [-1 if x == float("inf") else int(x)
+                       for x in matrix[src_local]]
+            else:
+                row = sub.hop_distances_from(src_local)
+            self._bdist[src_local] = row
+        return row
+
+    def _dist_to_gateway(self, p: int, gw_local: int) -> list[int]:
+        """Pod-local hop distance from every pod node to one gateway."""
+        key = (p, gw_local)
+        row = self._pod_dist_to_gw.get(key)
+        if row is None:
+            row = self._pod(p).view.topology.hop_distances_to(gw_local)
+            self._pod_dist_to_gw[key] = row
+        return row
+
+    def _dist_from_gateway(self, p: int, gw_local: int) -> list[int]:
+        key = (p, gw_local)
+        row = self._pod_dist_from_gw.get(key)
+        if row is None:
+            row = self._pod(p).view.topology.hop_distances_from(gw_local)
+            self._pod_dist_from_gw[key] = row
+        return row
+
+    def _nearest_gateway(self, p: int, node: int) -> int:
+        """The pod-``p`` gateway nearest to ``node`` (global id), measured
+        node->gateway; ties break on gateway order (pod-locally symmetric)."""
+        ctx = self._pod(p)
+        nl = ctx.view.to_local[node]
+        best, best_d = None, None
+        for gi, gl in enumerate(ctx.gateways_local):
+            d = self._dist_to_gateway(p, gl)[nl]
+            if d < 0:
+                continue
+            if best_d is None or d < best_d:
+                best, best_d = gi, d
+        if best is None:
+            raise HierarchyError(f"node {node} cannot reach pod {p} gateways")
+        return ctx.gateways[best]
+
+    def _reachable_gateways(self, egress: int, q: int) -> list[tuple[int, int, int]]:
+        """Pod-``q`` gateways reachable from global gateway ``egress`` over
+        the boundary fabric: [(bdist, local gateway index, global id)],
+        sorted — the deterministic candidate list for ingress selection.
+        Memoized: bulk collectives query the same (egress, pod) pair for
+        thousands of chunks."""
+        got = self._reach_cache.get((egress, q))
+        if got is not None:
+            return got
+        bview = self._boundary()
+        row = self._bdist_row(bview.to_local[egress])
+        ctx = self._pod(q)
+        out = []
+        for gi, g in enumerate(ctx.gateways):
+            d = row[bview.to_local[g]]
+            if d >= 0:
+                out.append((d, gi, g))
+        out.sort()
+        if not out:
+            raise HierarchyError(
+                f"no pod-{q} gateway reachable from gateway {egress} over "
+                f"the boundary fabric"
+            )
+        self._reach_cache[(egress, q)] = out
+        return out
+
+    def _pipeline_safe(self, involved: list[int]) -> bool:
+        """Pipelining overlaps the inter phase with intra/scatter phases in
+        time; that is congestion-safe only when the boundary fabric shares
+        no links with the involved pods' internal fabrics."""
+        blinks = set(self._boundary().links)
+        for p in involved:
+            if blinks & set(self._pod(p).view.links):
+                return False
+        return True
+
+    # -- phase synthesis helpers -------------------------------------------
+
+    def _synthesize_local(
+        self, sub: Topology, conds: list[Condition], *, kind: str,
+        cacheable: bool, replicate: bool = False,
+    ) -> CollectiveAlgorithm:
+        """Synthesize a phase on its (sub-)topology, through the registry
+        when one is attached so isomorphic pods (equal sub-topology
+        fingerprints + equal condition signatures) share one plan.
+
+        ``replicate`` turns on the engine's path-replication fast path —
+        used in the sequential (scale) regime, where phase traffic is bulk
+        runs of identical conditions and schedule tightness is already
+        bounded by the phase barriers; the pipelined regime keeps the full
+        per-chunk search for the tightest makespans."""
+        if not conds:
+            return CollectiveAlgorithm(sub, [], [], name=kind)
+        if self.registry is None or not cacheable:
+            return self.engine.synthesize(conds, name=kind, topology=sub,
+                                          replicate=replicate)
+
+        def synth(_group):
+            return self.engine.synthesize(conds, name=kind, topology=sub,
+                                          replicate=replicate)
+
+        return self.registry.get_or_synthesize(
+            sub, f"hier:{kind}", range(len(sub.npus)), synth,
+            params=(_signature(conds), replicate),
+        )
+
+    # -- collectives --------------------------------------------------------
+
+    def all_gather(
+        self, group, *, bytes: float = 1.0, chunks_per_npu: int = 1,
+        ids: ChunkIds | None = None, pipeline: str | bool = "auto",
+    ) -> CollectiveAlgorithm:
+        """Hierarchical All-Gather: intra-pod all-gather (plus delivery to
+        the chunk's egress gateway), gateway exchange across the boundary
+        fabric (one multicast condition per chunk, fanning out to one
+        ingress gateway per remote pod), then per-pod scatter of the arrived
+        remote chunks."""
+        group = list(group)
+        involved = self._require(group)
+        conds = cnd.all_gather(group, ids=ids or ChunkIds(), bytes=bytes,
+                               chunks_per_npu=chunks_per_npu)
+        part = self.topology.partition
+        members = {p: [m for m in group if part[m] == p] for p in involved}
+
+        # chunk ordinal within its pod drives balanced gateway round-robin
+        ord_in_pod: dict[int, int] = {}
+        seen: dict[int, int] = {}
+        egress: dict[int, int] = {}
+        for c in conds:
+            p = part[c.src]
+            k = seen.get(p, 0)
+            seen[p] = k + 1
+            ord_in_pod[c.chunk] = k
+            gws = self._pod(p).gateways
+            egress[c.chunk] = gws[k % len(gws)]
+
+        # ingress gateway per (chunk, remote pod), balanced over the
+        # reachable candidates
+        ingress: dict[tuple[int, int], int] = {}
+        for c in conds:
+            p = part[c.src]
+            for q in involved:
+                if q == p:
+                    continue
+                cand = self._reachable_gateways(egress[c.chunk], q)
+                ingress[(c.chunk, q)] = cand[ord_in_pod[c.chunk] % len(cand)][2]
+
+        def intra_conds(p, ctx):
+            out = []
+            for c in conds:
+                if part[c.src] != p:
+                    continue
+                dests = set(members[p]) | {egress[c.chunk]}
+                dests.discard(c.src)
+                if not dests:
+                    continue
+                out.append(Condition(
+                    c.chunk, ctx.view.to_local[c.src],
+                    _dests_local(ctx.view, dests | {c.src}),
+                    bytes=bytes, tag="hier_intra",
+                ))
+            return out
+
+        def inter_conds(bview):
+            out = []
+            for c in conds:
+                p = part[c.src]
+                dests = {ingress[(c.chunk, q)] for q in involved if q != p}
+                dests.discard(egress[c.chunk])
+                if not dests:
+                    continue
+                out.append(Condition(
+                    c.chunk, bview.to_local[egress[c.chunk]],
+                    _dests_local(bview, dests), bytes=bytes,
+                    tag="hier_inter",
+                ))
+            return out
+
+        def scatter_conds(q, ctx):
+            out = []
+            for c in conds:
+                if part[c.src] == q:
+                    continue
+                src = ingress[(c.chunk, q)]
+                dests = set(members[q]) - {src}
+                if not dests:
+                    continue
+                out.append(Condition(
+                    c.chunk, ctx.view.to_local[src],
+                    _dests_local(ctx.view, dests | {src}),
+                    bytes=bytes, tag="hier_scatter",
+                ))
+            return out
+
+        return self._compose(
+            "pccl_hier_all_gather", conds, involved, intra_conds,
+            inter_conds, scatter_conds, pipeline=pipeline,
+            group_size=len(group), arrival_node=egress,
+            ingress_of=lambda g, q: ingress[(g, q)],
+        )
+
+    def all_to_all(
+        self, group, *, bytes: float = 1.0, chunks_per_pair: int = 1,
+        ids: ChunkIds | None = None, pipeline: str | bool = "auto",
+    ) -> CollectiveAlgorithm:
+        """Hierarchical All-to-All: same-pod chunks resolve inside their
+        pod's intra phase; cross-pod chunks ride source -> nearest egress
+        gateway -> boundary fabric -> ingress gateway nearest the
+        destination -> destination."""
+        group = list(group)
+        involved = self._require(group)
+        conds = cnd.all_to_all(group, ids=ids or ChunkIds(), bytes=bytes,
+                               chunks_per_pair=chunks_per_pair)
+        part = self.topology.partition
+
+        dest_of = {c.chunk: next(iter(c.dests)) for c in conds}
+        egress: dict[int, int] = {}
+        ingress: dict[int, int] = {}
+        nearest: dict[int, int] = {}  # src -> egress gateway, memoized
+        # Gateway strategy per ordered pod pair: on densely-connected
+        # boundary fabrics (every remote gateway reachable — the DCI-switch
+        # case) pair (p, q) traffic cycles through aligned (egress, ingress)
+        # gateway pairs — chunk k of the pair rides gateway pair
+        # (r + k) mod G, with r the relative pod index. That balances every
+        # up/downlink while collapsing the inter phase to G distinct
+        # endpoint pairs per pod pair (long path-replication runs instead
+        # of one search per chunk), and the per-gateway histograms are
+        # pod-position-independent, so per-pod plans still registry-share.
+        # Sparse boundary fabrics (plane-partitioned tori, where only the
+        # aligned gateway is reachable) fall back to nearest-gateway
+        # selection per chunk.
+        pair_dense: dict[tuple[int, int], bool] = {}
+        pair_ord: dict[tuple[int, int], int] = {}
+
+        use_aligned = self.gateway_strategy == "aligned"
+
+        def _pair_dense(p: int, q: int) -> bool:
+            if not use_aligned:
+                return False
+            got = pair_dense.get((p, q))
+            if got is None:
+                gq = self._pod(q).gateways
+                cand = self._reachable_gateways(self._pod(p).gateways[0], q)
+                got = pair_dense[(p, q)] = len(cand) == len(gq)
+            return got
+
+        # bucket by source/destination pod in one pass: the per-pod phase
+        # builders then touch only their own conditions instead of scanning
+        # the full million-condition list once per pod (O(P * conds))
+        by_src_pod: dict[int, list[Condition]] = {p: [] for p in involved}
+        by_dst_pod: dict[int, list[Condition]] = {p: [] for p in involved}
+        num_pods = self.topology.num_pods
+        for c in conds:
+            d = dest_of[c.chunk]
+            p, q = part[c.src], part[d]
+            by_src_pod[p].append(c)
+            if p == q:
+                continue
+            by_dst_pod[q].append(c)
+            if _pair_dense(p, q):
+                k = pair_ord.get((p, q), 0)
+                pair_ord[(p, q)] = k + 1
+                r = (q - p) % num_pods
+                gp = self._pod(p).gateways
+                gq = self._pod(q).gateways
+                egress[c.chunk] = gp[(r + k) % len(gp)]
+                ingress[c.chunk] = gq[((num_pods - r) + k) % len(gq)]
+                continue
+            e = nearest.get(c.src)
+            if e is None:
+                e = nearest[c.src] = self._nearest_gateway(p, c.src)
+            egress[c.chunk] = e
+            i = self._ingress_cache.get((e, d))
+            if i is None:
+                cand = self._reachable_gateways(e, q)
+                ctxq = self._pod(q)
+                dl = ctxq.view.to_local[d]
+                best = min(
+                    cand,
+                    key=lambda t: (t[0], self._dist_from_gateway(
+                        q, ctxq.gateways_local[t[1]])[dl], t[1]),
+                )
+                i = self._ingress_cache[(e, d)] = best[2]
+            ingress[c.chunk] = i
+
+        def intra_conds(p, ctx):
+            out = []
+            to_local = ctx.view.to_local
+            for c in by_src_pod[p]:
+                d = dest_of[c.chunk]
+                target = d if part[d] == p else egress[c.chunk]
+                if target == c.src:
+                    continue
+                out.append(Condition(
+                    c.chunk, to_local[c.src],
+                    frozenset([to_local[target]]),
+                    bytes=bytes, tag="hier_intra",
+                ))
+            return out
+
+        def inter_conds(bview):
+            out = []
+            to_local = bview.to_local
+            for c in conds:
+                e = egress.get(c.chunk)
+                if e is None:
+                    continue
+                out.append(Condition(
+                    c.chunk, to_local[e],
+                    frozenset([to_local[ingress[c.chunk]]]),
+                    bytes=bytes, tag="hier_inter",
+                ))
+            return out
+
+        def scatter_conds(q, ctx):
+            out = []
+            to_local = ctx.view.to_local
+            for c in by_dst_pod[q]:
+                d = dest_of[c.chunk]
+                src = ingress[c.chunk]
+                if src == d:
+                    continue
+                out.append(Condition(
+                    c.chunk, to_local[src],
+                    frozenset([to_local[d]]),
+                    bytes=bytes, tag="hier_scatter",
+                ))
+            return out
+
+        return self._compose(
+            "pccl_hier_all_to_all", conds, involved, intra_conds,
+            inter_conds, scatter_conds, pipeline=pipeline,
+            group_size=len(group), arrival_node=egress,
+            ingress_of=lambda g, q: ingress.get(g),
+        )
+
+    # -- stitching ----------------------------------------------------------
+
+    def _compose(
+        self, name, conds, involved, intra_conds, inter_conds, scatter_conds,
+        *, pipeline, group_size, arrival_node, ingress_of,
+    ) -> CollectiveAlgorithm:
+        """Build phase-local condition sets, synthesize (registry-shared
+        where canonical), and stitch through the engine's PhasePlan."""
+        if pipeline == "auto":
+            pipeline = (
+                group_size <= _AUTO_PIPELINE_MAX_GROUP
+                and self._pipeline_safe(involved)
+            )
+        elif pipeline and not self._pipeline_safe(involved):
+            raise HierarchyError(
+                "pipeline=True requires boundary links disjoint from pod "
+                "links (the inter phase would congest pod fabrics)"
+            )
+
+        bview = self._boundary()
+        replicate = not pipeline
+        phases: list[PhaseSpec] = []
+        intra_names = []
+
+        # --- intra phases (canonical, registry-shared across pods) --------
+        intra_local: dict[int, CollectiveAlgorithm] = {}
+        intra_maps: dict[int, dict[int, int]] = {}
+        for p in involved:
+            ctx = self._pod(p)
+            phase_conds, cmap = _canonicalize_phase(intra_conds(p, ctx))
+            alg = self._synthesize_local(
+                ctx.view.topology, phase_conds, kind="intra", cacheable=True,
+                replicate=replicate,
+            )
+            intra_local[p] = alg
+            intra_maps[p] = cmap
+            phases.append(PhaseSpec(
+                f"intra:{p}", algorithm=alg, topology=ctx.view.topology,
+                node_map=ctx.view.nodes, link_map=ctx.view.links,
+                chunk_map=cmap,
+            ))
+            intra_names.append(f"intra:{p}")
+
+        # --- inter phase ---------------------------------------------------
+        b_conds, b_chunk_map = _canonicalize_phase(inter_conds(bview))
+        blids = {g: l for l, g in b_chunk_map.items()}
+        if pipeline:
+            # release each chunk at its (lifted) arrival on the egress
+            # gateway: the inter phase overlaps the intra phases, which is
+            # congestion-safe because their link sets are disjoint.
+            arr: dict[tuple[int, int], float] = {}
+            for p in involved:
+                ctx = self._pod(p)
+                cm = intra_maps[p]
+                nm = ctx.view.nodes
+                for t in intra_local[p].transfers:
+                    key = (cm[t.chunk], nm[t.dst])
+                    if key not in arr or t.end < arr[key]:
+                        arr[key] = t.end
+            rel_conds = []
+            for c in b_conds:
+                g = b_chunk_map[c.chunk]
+                node = arrival_node.get(g)
+                rel = arr.get((g, node), 0.0) if node is not None else 0.0
+                rel_conds.append(replace(c, release=rel) if rel else c)
+            inter_alg = self._synthesize_local(
+                bview.topology, rel_conds, kind="inter", cacheable=False,
+            )
+            phases.append(PhaseSpec(
+                "inter", algorithm=inter_alg, topology=bview.topology,
+                node_map=bview.nodes, link_map=bview.links,
+                chunk_map=b_chunk_map,
+            ))
+        else:
+            inter_alg = self._synthesize_local(
+                bview.topology, b_conds, kind="inter", cacheable=True,
+                replicate=True,
+            )
+            phases.append(PhaseSpec(
+                "inter", algorithm=inter_alg, topology=bview.topology,
+                node_map=bview.nodes, link_map=bview.links,
+                chunk_map=b_chunk_map, after=tuple(intra_names),
+            ))
+
+        # --- scatter phases ------------------------------------------------
+        if pipeline:
+            # per-chunk releases at ingress arrival; overlap with the pod's
+            # intra phase is made safe by preloading it into the shared
+            # sub-TEN. Arrival times come from the lifted inter transfers.
+            inter_arr = _arrivals(inter_alg.transfers)
+        for q in involved:
+            ctx = self._pod(q)
+            s_conds, s_chunk_map = _canonicalize_phase(scatter_conds(q, ctx))
+            if not s_conds:
+                continue
+            if pipeline:
+                rel_conds = []
+                for c in s_conds:
+                    g = s_chunk_map[c.chunk]
+                    node = ingress_of(g, q)
+                    rel = 0.0
+                    if node is not None:
+                        rel = inter_arr.get(
+                            (blids.get(g, -1), bview.to_local.get(node, -1)),
+                            0.0,
+                        )
+                    rel_conds.append(
+                        replace(c, release=rel) if rel else c
+                    )
+                phases.append(PhaseSpec(
+                    f"scatter:{q}", conds=rel_conds,
+                    topology=ctx.view.topology, node_map=ctx.view.nodes,
+                    link_map=ctx.view.links, chunk_map=s_chunk_map,
+                    preload_from=(f"intra:{q}",), after=(),
+                ))
+            else:
+                alg = self._synthesize_local(
+                    ctx.view.topology, s_conds, kind="scatter",
+                    cacheable=True, replicate=True,
+                )
+                phases.append(PhaseSpec(
+                    f"scatter:{q}", algorithm=alg,
+                    topology=ctx.view.topology, node_map=ctx.view.nodes,
+                    link_map=ctx.view.links, chunk_map=s_chunk_map,
+                    after=("inter",),
+                ))
+
+        return self.engine.synthesize_plan(
+            PhasePlan(phases, list(conds), name=name)
+        )
+
+

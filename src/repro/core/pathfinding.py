@@ -214,7 +214,12 @@ def bfs_int(ten: TEN, cond: Condition, max_steps: int | None = None) -> PathResu
         # Links become free after the committed horizon, so any connected
         # destination is reachable within horizon + |V| steps.
         max_steps = int(ten.horizon()) + n + t0 + 4
-    if csr.any_switch:
+    if csr.constrained_switch:
+        # Only finite buffers / serialized egress invalidate the bound and
+        # elision optimizations; unlimited multicast switches (DCI/spine
+        # fabrics) behave exactly like NPUs in the search, so they stay on
+        # the fast path below — the switched loop's special branches would
+        # never fire for them (see the no-op guards in _bfs_int_switched).
         return _bfs_int_switched(ten, cond, csr, t0, max_steps)
 
     masks = ten._masks

@@ -209,7 +209,8 @@ def relabel_algorithm(
                  t.start, t.end, t.reduce)
         for t in alg.transfers
     ]
-    return CollectiveAlgorithm(topo, conds, transfers, name=alg.name)
+    return CollectiveAlgorithm(topo, conds, transfers, name=alg.name,
+                               phase_spans=list(alg.phase_spans))
 
 
 def renumber_chunks(
@@ -224,7 +225,8 @@ def renumber_chunks(
         return alg
     conds = [replace(c, chunk=mapping[c.chunk]) for c in alg.conditions]
     transfers = [replace(t, chunk=mapping[t.chunk]) for t in alg.transfers]
-    return CollectiveAlgorithm(alg.topology, conds, transfers, name=alg.name)
+    return CollectiveAlgorithm(alg.topology, conds, transfers, name=alg.name,
+                               phase_spans=list(alg.phase_spans))
 
 
 # ---------------------------------------------------------------------------
@@ -300,8 +302,17 @@ class AlgorithmRegistry:
         try:
             with open(path, encoding="utf-8") as f:
                 return from_msccl_json(f.read(), topo)
-        except (OSError, ValueError, KeyError):
-            return None  # corrupt/stale entry: fall through to synthesis
+        except (OSError, ValueError, KeyError, TypeError, AttributeError,
+                IndexError):
+            # Corrupt, truncated, or wrong-shape document (a half-written
+            # file from a killed process, a stale schema, hand-edited JSON):
+            # never fail the lookup — drop the bad entry so the fresh plan
+            # replaces it, and resynthesize.
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
 
     def _store_disk(self, key: tuple, alg: CollectiveAlgorithm) -> None:
         path = self._disk_path(key)

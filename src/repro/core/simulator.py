@@ -109,6 +109,17 @@ def replay_algorithm(alg: CollectiveAlgorithm) -> SimResult:
     )
 
 
+def phase_breakdown(alg: CollectiveAlgorithm) -> dict[str, dict[str, float]]:
+    """Per-phase timing of a composed (hierarchical / PhasePlan) algorithm:
+    ``{phase: {"start", "end", "span"}}`` from the algorithm's recorded
+    ``phase_spans`` — e.g. how much of a hierarchical All-to-All's makespan
+    the inter-pod phase accounts for. Empty for single-phase algorithms."""
+    return {
+        name: {"start": lo, "end": hi, "span": hi - lo}
+        for name, lo, hi in getattr(alg, "phase_spans", [])
+    }
+
+
 def collective_bandwidth(
     result: SimResult, payload_bytes: float
 ) -> float:

@@ -44,16 +44,18 @@ def synthesize(
 
 
 def synthesize_all_gather(topo, group, *, bytes=1.0, chunks_per_npu=1,
-                          ids=None, registry=None):
+                          ids=None, registry=None, hierarchy="auto"):
     return SynthesisEngine(topo, registry=registry).all_gather(
-        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids
+        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids,
+        hierarchy=hierarchy,
     )
 
 
 def synthesize_all_to_all(topo, group, *, bytes=1.0, chunks_per_pair=1,
-                          ids=None, registry=None):
+                          ids=None, registry=None, hierarchy="auto"):
     return SynthesisEngine(topo, registry=registry).all_to_all(
-        list(group), bytes=bytes, chunks_per_pair=chunks_per_pair, ids=ids
+        list(group), bytes=bytes, chunks_per_pair=chunks_per_pair, ids=ids,
+        hierarchy=hierarchy,
     )
 
 

@@ -231,7 +231,16 @@ class MeshCollectivePlanner:
 
     ``axis_sizes`` is an ordered {axis name: size} whose product must equal
     the NPU count; device index = row-major rank, assumed to coincide with
-    the topology's NPU ids (true for ``tpu_v5e_pod``/``torus2d`` meshes).
+    the topology's NPU ids (true for ``tpu_v5e_pod``/``torus2d`` meshes, and
+    for ``multi_pod`` meshes whose leading axis is the pod axis).
+
+    On partitioned fabrics (``multi_pod`` et al), groups that span pods —
+    e.g. the data-parallel axis of a ("pod", "data", "model") mesh — are
+    routed through the hierarchical synthesis pipeline automatically (the
+    engine's ``hierarchy="auto"``): per-pod phases are synthesized once per
+    canonical pod and stitched with an inter-pod phase, instead of paying a
+    flat whole-fabric TEN search per group. Pass ``hierarchy="never"`` to
+    force flat synthesis.
     """
 
     def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None):
@@ -258,9 +267,20 @@ class MeshCollectivePlanner:
         return [list(map(int, row)) for row in
                 moved.reshape(-1, self.axis_sizes[axis])]
 
+    def spans_pods(self, axis: str) -> bool:
+        """True iff this axis' process groups cross a pod boundary (and will
+        therefore take the hierarchical synthesis path by default)."""
+        if self.topo.partition is None:
+            return False
+        return self.engine.hierarchical().spans_pods(self.axis_groups(axis)[0])
+
     def algorithm(self, kind: str, axis: str, group_index: int = 0, *,
                   nbytes: float = 1.0, **kw):
-        """The synthesized (or registry-served) algorithm for one group."""
+        """The synthesized (or registry-served) algorithm for one group.
+
+        ``all_gather``/``all_to_all`` groups that span pods route through
+        the hierarchical pipeline automatically; override with
+        ``hierarchy="never"`` (or "always")."""
         if kind not in ("all_gather", "all_to_all", "all_reduce",
                         "reduce_scatter", "reduce"):
             raise ValueError(f"unknown collective kind {kind!r}")

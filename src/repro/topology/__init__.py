@@ -1,4 +1,4 @@
-from repro.topology.topology import Link, Node, NodeType, Topology
+from repro.topology.topology import Link, Node, NodeType, Topology, TopologyView
 from repro.topology.generators import (
     ring,
     line,
@@ -17,6 +17,7 @@ __all__ = [
     "Node",
     "NodeType",
     "Topology",
+    "TopologyView",
     "ring",
     "line",
     "mesh2d",

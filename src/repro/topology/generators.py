@@ -111,16 +111,22 @@ def hypercube(dims: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
 
 def grid_hypercube(side: int, dims: int, alpha: float = 0.0, beta: float = 1.0) -> Topology:
     """'3D Hypercube' in the paper's sense = dims-dimensional torus with equal
-    sides (side**dims NPUs). dims=3 gives the paper's 3D Hypercube."""
+    sides (side**dims NPUs). dims=3 gives the paper's 3D Hypercube.
+
+    The fabric is partitioned into ``side`` pods along the first dimension
+    (one (dims-1)-torus plane each); the wraparound dim-0 links are the
+    boundary fabric, so hierarchical synthesis decomposes per-plane."""
     if dims == 3:
         t = torus3d(side, side, side, alpha, beta)
         t.name = f"hypercube3d_{side}"
-        return t
-    if dims == 2:
+    elif dims == 2:
         t = torus2d(side, side, alpha, beta)
         t.name = f"hypercube2d_{side}"
-        return t
-    raise ValueError(f"unsupported dims={dims}")
+    else:
+        raise ValueError(f"unsupported dims={dims}")
+    plane = side ** (dims - 1)
+    t.set_partition([n // plane for n in range(t.num_nodes)])
+    return t
 
 
 def star_switch(
@@ -164,6 +170,10 @@ def two_level_switch(
         for j in range(npus_per_node):
             topo.add_bidir_link(node * npus_per_node + j, local[node], local_alpha, local_beta)
         topo.add_bidir_link(local[node], spine, spine_alpha, spine_beta)
+    # pods = {node's NPUs + its local switch}; the spine is shared (-1)
+    pod_of = [i // npus_per_node for i in range(num_nodes * npus_per_node)]
+    pod_of += list(range(num_nodes)) + [-1]
+    topo.set_partition(pod_of)
     return topo
 
 
@@ -187,26 +197,41 @@ def multi_pod(
     dci_gbps: float = 25.0,
     dci_alpha: float = 10.0,
     dci_ports_per_pod: int = 16,
+    unit_links: bool = False,
 ) -> Topology:
     """num_pods TPU pods; pod edge devices uplink to a DCI switch.
 
     NPU ids: pod p occupies [p*rows*cols, (p+1)*rows*cols). A single switch
     models the inter-pod fabric; each pod contributes `dci_ports_per_pod`
-    uplinks from its first row (the 'edge' row).
+    uplinks from its first row (the 'edge' row). The partition (pod per
+    torus, DCI switch shared) is set automatically, so hierarchical
+    synthesis applies out of the box.
+
+    ``unit_links=True`` collapses every link to (alpha=0, beta=1) — the
+    paper's homogeneous unit-time regime — so the integer TEN fast path
+    drives all phases; used by the scale benchmarks.
     """
     beta_ici = (1.0 / (link_gbps * 1e9)) * (1 << 20) * 1e6
     beta_dci = (1.0 / (dci_gbps * 1e9)) * (1 << 20) * 1e6
-    topo = Topology(f"multi_pod_{num_pods}x{rows}x{cols}")
+    alpha_ici, alpha_dci = 1.0, dci_alpha
+    if unit_links:
+        alpha_ici = alpha_dci = 0.0
+        beta_ici = beta_dci = 1.0
+    suffix = "_unit" if unit_links else ""
+    topo = Topology(f"multi_pod_{num_pods}x{rows}x{cols}{suffix}")
     per_pod = rows * cols
     topo.add_npus(num_pods * per_pod)
     idx = lambda p, r, c: p * per_pod + r * cols + c
     for p in range(num_pods):
         for r in range(rows):
             for c in range(cols):
-                topo.add_bidir_link(idx(p, r, c), idx(p, r, (c + 1) % cols), 1.0, beta_ici)
-                topo.add_bidir_link(idx(p, r, c), idx(p, (r + 1) % rows, c), 1.0, beta_ici)
+                topo.add_bidir_link(idx(p, r, c), idx(p, r, (c + 1) % cols), alpha_ici, beta_ici)
+                topo.add_bidir_link(idx(p, r, c), idx(p, (r + 1) % rows, c), alpha_ici, beta_ici)
     dci = topo.add_node(NodeType.SWITCH, buffer_limit=None, multicast=True)
     for p in range(num_pods):
         for c in range(min(dci_ports_per_pod, cols)):
-            topo.add_bidir_link(idx(p, 0, c), dci, dci_alpha, beta_dci)
+            topo.add_bidir_link(idx(p, 0, c), dci, alpha_dci, beta_dci)
+    topo.set_partition(
+        [n // per_pod for n in range(num_pods * per_pod)] + [-1]
+    )
     return topo

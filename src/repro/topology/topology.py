@@ -6,12 +6,21 @@ A topology is a directed multigraph over *devices*. Devices are either NPUs
 paper §4.7). Every directed link carries its own alpha (latency, us) and
 beta (1/bandwidth, us per byte) — the alpha-beta model of paper §4.6 — so
 heterogeneous and asymmetric networks are first-class.
+
+Multi-pod fabrics additionally carry *partition metadata*: a pod id per
+device (``set_partition``), from which derived views are computed — per-pod
+sub-topologies, the boundary link set, the boundary sub-topology the
+inter-pod synthesis phase runs on, and a quotient "pod graph" whose nodes
+are pods. The hierarchical synthesis pipeline (:mod:`repro.core.hierarchy`)
+consumes these views; generators that know their pod structure
+(``multi_pod``, ``two_level_switch``, ``grid_hypercube``) set the partition
+automatically, and custom fabrics can call ``set_partition`` directly.
 """
 
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -79,6 +88,37 @@ class CSRAdjacency:
     serial_switch: tuple  # per-node bool: switch and not multicast
     limited_switches: tuple  # node ids of switches with a buffer_limit
     any_switch: bool
+    # True iff some switch actually constrains the search (finite buffer or
+    # serialized egress); unlimited multicast switches behave like NPUs, so
+    # unconstrained fabrics take the fast pathfinding/commit paths
+    constrained_switch: bool = False
+
+
+@dataclass(frozen=True)
+class TopologyView:
+    """A sub-topology extracted from a parent fabric, plus the coordinate
+    maps needed to lift synthesized transfers back into the parent.
+
+    ``nodes[i]`` / ``links[j]`` are the parent ids of local node ``i`` /
+    local link ``j``; local ids are dense and assigned in ascending parent-id
+    order, so two structurally-identical pods of one fabric extract to
+    byte-identical local topologies (and therefore equal registry
+    fingerprints — the property hierarchical synthesis relies on to pay one
+    synthesis for N isomorphic pods).
+    """
+
+    topology: "Topology"
+    parent: "Topology"
+    nodes: tuple[int, ...]  # local node id -> parent node id
+    links: tuple[int, ...]  # local link id -> parent link id
+
+    @property
+    def to_local(self) -> dict[int, int]:
+        got = self.__dict__.get("_to_local")
+        if got is None:
+            got = {g: l for l, g in enumerate(self.nodes)}
+            self.__dict__["_to_local"] = got
+        return got
 
 
 class Topology:
@@ -100,6 +140,9 @@ class Topology:
         # before use, so a wrong generator degrades cache sharing, never
         # correctness. Empty = only the identity is assumed.
         self.automorphism_generators: list[tuple[int, ...]] = []
+        # Partition metadata: node id -> pod id (-1 = shared/unassigned,
+        # e.g. an inter-pod switch). None until set_partition is called.
+        self._pod_of: tuple[int, ...] | None = None
 
     # -- construction ------------------------------------------------------
     def _invalidate_caches(self) -> None:
@@ -107,7 +150,8 @@ class Topology:
         attached synthesis engines) when the graph mutates."""
         for attr in ("_structure_hash", "_automorphism_closure",
                      "_pccl_engines", "_csr_cache", "_rev_dist_rows",
-                     "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache"):
+                     "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache",
+                     "_pod_views"):
             if hasattr(self, attr):
                 delattr(self, attr)
 
@@ -122,6 +166,8 @@ class Topology:
         self.nodes.append(Node(nid, type, buffer_limit, multicast))
         self._out.append([])
         self._in.append([])
+        if self._pod_of is not None:  # nodes added later start unassigned
+            self._pod_of = self._pod_of + (-1,)
         return nid
 
     def add_npus(self, n: int) -> list[int]:
@@ -177,6 +223,206 @@ class Topology:
         a0, b0 = self.links[0].alpha, self.links[0].beta
         return all(l.alpha == a0 and l.beta == b0 for l in self.links)
 
+    # -- partition metadata (multi-pod fabrics) ----------------------------
+    def set_partition(self, pod_of) -> None:
+        """Declare pod membership: ``pod_of[node] = pod id`` with pods dense
+        ``0..P-1``; ``-1`` marks shared devices owned by no pod (e.g. an
+        inter-pod DCI switch). Generators with known structure call this;
+        custom fabrics may too. Derived views (:meth:`pod_subtopology`,
+        :meth:`boundary_subtopology`, :meth:`pod_graph`) are recomputed
+        lazily after every call."""
+        pod_of = tuple(int(p) for p in pod_of)
+        if len(pod_of) != self.num_nodes:
+            raise ValueError(
+                f"partition names {len(pod_of)} nodes, fabric has "
+                f"{self.num_nodes}"
+            )
+        used = sorted({p for p in pod_of if p >= 0})
+        if any(p < -1 for p in pod_of):
+            raise ValueError("pod ids must be >= -1")
+        if used != list(range(len(used))):
+            raise ValueError(f"pod ids must be dense 0..P-1, got {used}")
+        self._pod_of = pod_of
+        if hasattr(self, "_pod_views"):
+            delattr(self, "_pod_views")
+
+    @property
+    def partition(self) -> tuple[int, ...] | None:
+        """``pod_of`` tuple, or None for unpartitioned fabrics."""
+        return self._pod_of
+
+    @property
+    def num_pods(self) -> int:
+        if self._pod_of is None:
+            return 0
+        return max(self._pod_of) + 1 if self._pod_of else 0
+
+    def pod_of(self, node: int) -> int:
+        if self._pod_of is None:
+            raise ValueError(f"{self.name}: no partition set")
+        return self._pod_of[node]
+
+    def _views(self) -> dict:
+        views = getattr(self, "_pod_views", None)
+        if views is None:
+            views = self._pod_views = {}
+        return views
+
+    def pods(self) -> list[list[int]]:
+        """Node ids per pod (ascending), excluding unassigned devices."""
+        views = self._views()
+        got = views.get("pods")
+        if got is None:
+            if self._pod_of is None:
+                raise ValueError(f"{self.name}: no partition set")
+            got = [[] for _ in range(self.num_pods)]
+            for node, p in enumerate(self._pod_of):
+                if p >= 0:
+                    got[p].append(node)
+            views["pods"] = got
+        return got
+
+    def pod_npus(self, pod: int) -> list[int]:
+        return [n for n in self.pods()[pod]
+                if self.nodes[n].type is NodeType.NPU]
+
+    def boundary_links(self) -> list[Link]:
+        """Links whose endpoints lie in different pods (a ``-1`` endpoint
+        counts as its own side): the inter-pod fabric."""
+        views = self._views()
+        got = views.get("boundary")
+        if got is None:
+            pod = self.pod_of
+            got = [l for l in self.links if pod(l.src) != pod(l.dst)]
+            views["boundary"] = got
+        return got
+
+    def _extract(self, node_ids, link_ids, name: str) -> TopologyView:
+        """Build a :class:`TopologyView` over the given parent node/link ids
+        (ascending parent order -> dense local ids)."""
+        node_ids = sorted(node_ids)
+        link_ids = sorted(link_ids)
+        sub = Topology(name)
+        local = {}
+        for g in node_ids:
+            nd = self.nodes[g]
+            local[g] = sub.add_node(nd.type, nd.buffer_limit, nd.multicast)
+        for g in link_ids:
+            l = self.links[g]
+            sub.add_link(local[l.src], local[l.dst], l.alpha, l.beta)
+        return TopologyView(sub, self, tuple(node_ids), tuple(link_ids))
+
+    def pod_subtopology(self, pod: int) -> TopologyView:
+        """Pod ``pod``'s internal fabric: its nodes plus the links with both
+        endpoints inside it. Isomorphic pods extract to identical local
+        topologies (same registry fingerprint), which is what lets one
+        synthesized pod plan serve every pod."""
+        views = self._views()
+        got = views.get(("sub", pod))
+        if got is None:
+            members = set(self.pods()[pod])
+            links = [l.id for l in self.links
+                     if l.src in members and l.dst in members]
+            got = self._extract(members, links,
+                                f"{self.name}_pod{pod}")
+            views[("sub", pod)] = got
+        return got
+
+    def gateways(self, pod: int) -> list[int]:
+        """Pod ``pod``'s gateway NPUs: NPU endpoints of boundary links when
+        any exist, else the pod NPUs one hop inside its boundary switches
+        (two-level-switch style fabrics, where the boundary port is the
+        local switch itself)."""
+        views = self._views()
+        got = views.get(("gw", pod))
+        if got is not None:
+            return got
+        members = set(self.pods()[pod])
+        ports = sorted(
+            {e for l in self.boundary_links()
+             for e in (l.src, l.dst) if e in members}
+        )
+        npu_ports = [n for n in ports
+                     if self.nodes[n].type is NodeType.NPU]
+        if npu_ports:
+            got = npu_ports
+        else:
+            got = sorted({
+                l.src
+                for sw in ports
+                for l in self._in[sw]
+                if l.src in members
+                and self.nodes[l.src].type is NodeType.NPU
+            })
+        views[("gw", pod)] = got
+        return got
+
+    def boundary_subtopology(self) -> TopologyView:
+        """The fabric the inter-pod synthesis phase runs on: every boundary
+        link, the unassigned (shared) devices with their internal links, each
+        pod's boundary ports — and, for pods whose ports are switches, the
+        gateway NPUs plus their links to those switches, so inter-pod
+        conditions can still originate and terminate at NPUs."""
+        views = self._views()
+        got = views.get("bsub")
+        if got is not None:
+            return got
+        pod = self.pod_of
+        nodes: set[int] = set()
+        links: set[int] = set()
+        for l in self.boundary_links():
+            links.add(l.id)
+            nodes.update((l.src, l.dst))
+        # shared devices and the links among them
+        shared = {n.id for n in self.nodes if pod(n.id) == -1}
+        nodes.update(shared)
+        links.update(l.id for l in self.links
+                     if l.src in shared and l.dst in shared)
+        # switch-port pods: pull in gateway NPUs + their port links
+        for p in range(self.num_pods):
+            gws = set(self.gateways(p))
+            if gws & nodes:
+                continue  # NPU ports already present
+            nodes.update(gws)
+            links.update(
+                l.id for l in self.links
+                if (l.src in gws and l.dst in nodes and pod(l.dst) == p)
+                or (l.dst in gws and l.src in nodes and pod(l.src) == p)
+            )
+        got = self._extract(nodes, links, f"{self.name}_boundary")
+        views["bsub"] = got
+        return got
+
+    def pod_graph(self) -> "Topology":
+        """Quotient "pod graph": one NPU-node per pod, one node per shared
+        device (keeping its type/attrs), and one link per boundary link with
+        its timing carried over — the coarse view used to reason about
+        pod-level routes and reachability."""
+        views = self._views()
+        got = views.get("graph")
+        if got is not None:
+            return got
+        g = Topology(f"{self.name}_podgraph")
+        for _ in range(self.num_pods):
+            g.add_node(NodeType.NPU)
+        shared_map = {}
+        for n in self.nodes:
+            if self.pod_of(n.id) == -1:
+                shared_map[n.id] = g.add_node(
+                    n.type, n.buffer_limit, n.multicast)
+
+        def q(node: int) -> int:
+            p = self.pod_of(node)
+            return shared_map[node] if p == -1 else p
+
+        for l in self.boundary_links():
+            g.add_link(q(l.src), q(l.dst), l.alpha, l.beta)
+        for l in self.links:
+            if self.pod_of(l.src) == -1 and self.pod_of(l.dst) == -1:
+                g.add_link(q(l.src), q(l.dst), l.alpha, l.beta)
+        views["graph"] = g
+        return g
+
     # -- array adjacency ---------------------------------------------------
     def csr(self) -> CSRAdjacency:
         """The cached :class:`CSRAdjacency` export (rebuilt on mutation)."""
@@ -214,6 +460,7 @@ class Topology:
             tuple(int(x) for x in src_ids),
             tuple(int(x) for x in link_ids),
             is_switch, serial, limited, any(is_switch),
+            bool(limited) or any(serial),
         )
         self._csr_cache = cached
         return cached
@@ -306,14 +553,26 @@ class Topology:
         return dist
 
     def reversed(self) -> "Topology":
-        """A copy with every link direction flipped (used for reduction synthesis)."""
+        """A copy with every link direction flipped (used for reduction synthesis).
+
+        Derived caches are carried instead of recomputed: the reversed view's
+        all-pairs hop matrix is the transpose of the forward one (link
+        reversal flips every path), so an already-computed forward matrix is
+        shared by value. The CSR export and per-destination rows stay lazy —
+        they are direction-dependent and rebuild on first use against the
+        reversed adjacency, so no stale forward adjacency can leak."""
         rev = Topology(self.name + "_rev")
         for node in self.nodes:
             rev.add_node(node.type, node.buffer_limit, node.multicast)
         for link in self.links:
             rev.add_link(link.dst, link.src, link.alpha, link.beta)
-        # node symmetries are direction-agnostic
+        # node symmetries are direction-agnostic, as is pod membership
         rev.automorphism_generators = list(self.automorphism_generators)
+        if self._pod_of is not None:
+            rev._pod_of = self._pod_of
+        cached = getattr(self, "_hop_matrix_cache", None)
+        if cached is not None and cached[0] is not False:
+            rev._hop_matrix_cache = (cached[0].T,)
         return rev
 
     def __repr__(self) -> str:

@@ -152,6 +152,46 @@ class TestRegistry:
         assert reg2.stats.disk_hits == 1 and reg2.stats.misses == 0
         assert alg2.makespan == alg1.makespan
 
+    @pytest.mark.parametrize("payload", [
+        "",                                   # empty file
+        "{ not json",                         # syntactically broken
+        "[1, 2, 3]",                          # valid JSON, wrong shape
+        '{"gpus": []}',                       # missing conditions section
+        "null",                               # wrong top-level type
+    ])
+    def test_corrupt_disk_entry_resynthesized(self, tmp_path, payload):
+        """A corrupt/truncated on-disk plan must be skipped (and replaced),
+        never raise out of get_or_synthesize."""
+        topo = torus2d(4, 4)
+        rows = torus_rows(4, 4)
+        reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
+        (entry,) = tmp_path.glob("*.json")
+        entry.write_text(payload, encoding="utf-8")
+
+        reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg = SynthesisEngine(topo, registry=reg2).all_gather(rows[0])
+        alg.validate()
+        assert reg2.stats.disk_hits == 0 and reg2.stats.misses == 1
+        # the bad entry was replaced by the fresh plan
+        reg3 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        SynthesisEngine(topo, registry=reg3).all_gather(rows[0])
+        assert reg3.stats.disk_hits == 1
+
+    def test_truncated_disk_entry_resynthesized(self, tmp_path):
+        """Half-written file from a killed process: same contract."""
+        topo = torus2d(4, 4)
+        reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        SynthesisEngine(topo, registry=reg1).all_gather(torus_rows(4, 4)[0])
+        (entry,) = tmp_path.glob("*.json")
+        entry.write_text(entry.read_text(encoding="utf-8")[: 50],
+                         encoding="utf-8")
+        reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg = SynthesisEngine(topo, registry=reg2).all_gather(
+            torus_rows(4, 4)[1])
+        alg.validate()
+        assert reg2.stats.misses == 1
+
     def test_relabel_preserves_validity_on_reduce(self):
         topo = torus2d(4, 4)
         eng = SynthesisEngine(topo)

@@ -1,0 +1,131 @@
+"""Tests for Topology partition metadata (pods, boundary views, pod graph)
+and the cache-carrying ``reversed()`` view."""
+
+import numpy as np
+import pytest
+
+from repro.core.registry import topology_fingerprint
+from repro.topology import NodeType, Topology, multi_pod, two_level_switch
+from repro.topology.generators import grid_hypercube
+
+
+class TestPartition:
+    def test_multi_pod_auto_partition(self):
+        topo = multi_pod(2, 4, 8)
+        assert topo.num_pods == 2
+        assert topo.partition[-1] == -1  # the DCI switch is shared
+        assert topo.pods()[0] == list(range(32))
+        assert len(topo.boundary_links()) == 2 * 2 * 8  # bidir uplinks
+        assert topo.gateways(0) == list(range(8))  # edge row, cols 0..7
+
+    def test_two_level_switch_partition(self):
+        topo = two_level_switch(3, npus_per_node=4)
+        assert topo.num_pods == 3
+        # pods own their local switch; gateways fall back to the NPUs one
+        # hop inside the boundary port (the local switch itself)
+        assert topo.gateways(1) == [4, 5, 6, 7]
+        spine = topo.num_nodes - 1
+        assert topo.partition[spine] == -1
+
+    def test_grid_hypercube_partition_planes(self):
+        topo = grid_hypercube(4, 3)
+        assert topo.num_pods == 4
+        assert all(len(p) == 16 for p in topo.pods())
+        # every NPU touches a dim-0 (boundary) link
+        assert len(topo.gateways(0)) == 16
+
+    def test_pod_subtopologies_isomorphic(self):
+        topo = multi_pod(4, 4, 4)
+        fps = {topology_fingerprint(topo.pod_subtopology(p).topology)
+               for p in range(4)}
+        assert len(fps) == 1  # one canonical pod plan serves every pod
+
+    def test_view_lift_maps(self):
+        topo = multi_pod(2, 4, 8)
+        view = topo.pod_subtopology(1)
+        # local node i is global node nodes[i]; links carry timing over
+        for ll, gl in zip(view.topology.links, view.links):
+            g = topo.links[gl]
+            assert (view.nodes[ll.src], view.nodes[ll.dst]) == (g.src, g.dst)
+            assert (ll.alpha, ll.beta) == (g.alpha, g.beta)
+
+    def test_boundary_subtopology_covers_gateways(self):
+        topo = multi_pod(2, 4, 8)
+        b = topo.boundary_subtopology()
+        got = set(b.nodes)
+        for p in range(2):
+            assert set(topo.gateways(p)) <= got
+
+    def test_pod_graph_quotient(self):
+        topo = multi_pod(3, 4, 4, dci_ports_per_pod=4)
+        g = topo.pod_graph()
+        assert len(g.npus) == 3  # one node per pod
+        assert len(g.switches) == 1  # shared DCI
+        assert g.num_links == len(topo.boundary_links())
+
+    def test_set_partition_validation(self):
+        topo = Topology("t")
+        topo.add_npus(4)
+        with pytest.raises(ValueError):
+            topo.set_partition([0, 1])  # wrong length
+        with pytest.raises(ValueError):
+            topo.set_partition([0, 2, 2, 0])  # not dense
+        topo.set_partition([0, 0, 1, 1])
+        assert topo.num_pods == 2
+        # nodes added later start unassigned
+        topo.add_node(NodeType.SWITCH)
+        assert topo.partition[-1] == -1
+
+    def test_mutation_invalidates_views(self):
+        topo = multi_pod(2, 2, 2)
+        before = len(topo.boundary_links())
+        topo.add_link(0, topo.num_nodes - 1, 1.0, 1.0)
+        assert len(topo.boundary_links()) == before + 1
+
+
+class TestReversedCaches:
+    def test_reversed_shares_hop_matrix(self):
+        topo = multi_pod(2, 2, 4)
+        fwd = topo.hop_matrix()
+        rev = topo.reversed()
+        # shared by transpose, not recomputed
+        assert rev._hop_matrix_cache[0].base is not None or np.shares_memory(
+            rev._hop_matrix_cache[0], fwd
+        )
+        assert np.array_equal(np.asarray(rev.hop_matrix()), fwd.T)
+
+    def test_reversed_distances_match_fresh_build(self):
+        """No stale adjacency: the shared-cache reversed view must agree
+        with a reversed topology built from scratch, for every source."""
+        topo = two_level_switch(2, npus_per_node=4)
+        topo.hop_matrix()  # warm the forward cache
+        shared = topo.reversed()
+        fresh = two_level_switch(2, npus_per_node=4).reversed()
+        for src in range(topo.num_nodes):
+            assert shared.hop_distances_from(src) == \
+                fresh.hop_distances_from(src)
+            assert shared.hop_distances_to(src) == fresh.hop_distances_to(src)
+
+    def test_reversed_before_forward_cache_stays_lazy(self):
+        topo = multi_pod(2, 2, 2)
+        rev = topo.reversed()  # forward matrix never computed
+        assert not hasattr(rev, "_hop_matrix_cache")
+        # still correct, built lazily against the reversed adjacency
+        d = rev.hop_distances_from(0)
+        assert d[0] == 0 and max(d) > 0
+
+    def test_reversed_view_is_isolated_from_mutation(self):
+        """Mutating the forward fabric after reversing must not leak into
+        the reversed view's adjacency or cached distances."""
+        topo = multi_pod(2, 2, 2)
+        topo.hop_matrix()
+        rev = topo.reversed()
+        before = rev.hop_distances_from(1)
+        topo.add_link(1, topo.num_nodes - 1, 1.0, 1.0)
+        topo.hop_matrix()
+        assert rev.hop_distances_from(1) == before
+        assert rev.num_links == topo.num_links - 1
+
+    def test_reversed_carries_partition(self):
+        topo = multi_pod(2, 2, 2)
+        assert topo.reversed().partition == topo.partition

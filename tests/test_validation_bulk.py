@@ -1,0 +1,165 @@
+"""Differential tests: the vectorized validation path must accept and
+reject exactly what the reference oracle does on its eligible class
+(plain conditions, unconstrained switches)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    AlgorithmRegistry,
+    CollectiveAlgorithm,
+    SynthesisEngine,
+    Transfer,
+)
+from repro.topology import multi_pod, ring, star_switch, torus2d
+
+
+@pytest.fixture(scope="module")
+def algs():
+    t1 = torus2d(3, 3)
+    eng = SynthesisEngine(t1)
+    t2 = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+    e2 = SynthesisEngine(t2, registry=AlgorithmRegistry())
+    return [
+        eng.all_gather(list(range(9))),
+        eng.all_to_all(list(range(9))),
+        e2.all_gather(t2.npus),  # hierarchical, stitched phases
+        e2.all_to_all(t2.npus),
+    ]
+
+
+def _mutate(alg, idx, **kw):
+    ts = list(alg.transfers)
+    ts[idx] = dataclasses.replace(ts[idx], **kw)
+    return CollectiveAlgorithm(alg.topology, alg.conditions, ts,
+                               name=alg.name)
+
+
+def _drop_last_delivery(alg):
+    """Remove the final transfer of some chunk: its destination is never
+    reached (post-condition failure)."""
+    ts = list(alg.transfers)
+    last = {}
+    for i, t in enumerate(ts):
+        last[t.chunk] = i
+    del ts[last[ts[-1].chunk]]
+    return CollectiveAlgorithm(alg.topology, alg.conditions, ts,
+                               name=alg.name)
+
+
+class TestBulkMatchesOracle:
+    @pytest.mark.parametrize("i", range(4))
+    def test_valid_schedules_accepted(self, algs, i):
+        alg = algs[i]
+        alg.validate(mode="oracle")
+        alg.validate(mode="bulk")
+
+    @pytest.mark.parametrize("i", range(4))
+    def test_congestion_rejected(self, algs, i):
+        alg = algs[i]
+        # move one transfer onto another's slot on the same link
+        a, b = None, None
+        by_link = {}
+        for k, t in enumerate(alg.transfers):
+            if t.link in by_link:
+                a, b = by_link[t.link], k
+                break
+            by_link[t.link] = k
+        assert a is not None
+        broken = _mutate(
+            alg, b,
+            start=alg.transfers[a].start,
+            end=alg.transfers[a].start
+            + (alg.transfers[b].end - alg.transfers[b].start),
+        )
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    @pytest.mark.parametrize("i", range(4))
+    def test_bad_duration_rejected(self, algs, i):
+        alg = algs[i]
+        broken = _mutate(alg, 0, end=alg.transfers[0].end + 0.5)
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    @pytest.mark.parametrize("i", range(4))
+    def test_causality_violation_rejected(self, algs, i):
+        alg = algs[i]
+        # find a forwarding transfer (sender is not the chunk's origin) and
+        # pull it before the chunk could have arrived
+        origin = {c.chunk: c.src for c in alg.conditions}
+        k = next(j for j, t in enumerate(alg.transfers)
+                 if t.src != origin[t.chunk])
+        t = alg.transfers[k]
+        broken = _mutate(alg, k, start=t.start - t.end,
+                         end=t.start - t.end + (t.end - t.start))
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    @pytest.mark.parametrize("i", range(4))
+    def test_missing_delivery_rejected(self, algs, i):
+        alg = algs[i]
+        broken = _drop_last_delivery(alg)
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    def test_wrong_link_endpoints_rejected(self):
+        alg = SynthesisEngine(ring(4)).all_gather(list(range(4)))
+        t = alg.transfers[0]
+        broken = _mutate(alg, 0, dst=(t.dst + 1) % 4)
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    def test_release_violation_rejected(self):
+        import dataclasses as dc
+
+        alg = SynthesisEngine(ring(4)).all_gather(list(range(4)))
+        conds = [dc.replace(c, release=5.0) for c in alg.conditions]
+        broken = CollectiveAlgorithm(alg.topology, conds,
+                                     list(alg.transfers), name=alg.name)
+        with pytest.raises(AssertionError):
+            broken.validate(mode="oracle")
+        with pytest.raises(AssertionError):
+            broken.validate(mode="bulk")
+
+    def test_bulk_refuses_constrained_switches(self):
+        topo = star_switch(4, buffer_limit=1)
+        alg = SynthesisEngine(topo).all_gather(list(range(4)))
+        alg.validate(mode="oracle")
+        with pytest.raises(ValueError, match="bulk validation"):
+            alg.validate(mode="bulk")
+        alg.validate()  # auto falls back to the oracle
+
+    def test_bulk_refuses_reductions(self):
+        alg = SynthesisEngine(ring(4)).all_reduce(list(range(4)))
+        alg.validate(mode="oracle")
+        with pytest.raises(ValueError, match="bulk validation"):
+            alg.validate(mode="bulk")
+
+    def test_bulk_empty_transfers(self):
+        """Zero transfers: clean post-condition rejection (not IndexError)
+        for missing deliveries, acceptance when every dest is the origin."""
+        from repro.core import Condition
+
+        topo = ring(4)
+        undelivered = CollectiveAlgorithm(
+            topo, [Condition(0, 0, frozenset([1]))], [])
+        with pytest.raises(AssertionError, match="never reached"):
+            undelivered.validate(mode="bulk")
+        with pytest.raises(AssertionError):
+            undelivered.validate(mode="oracle")
+        trivial = CollectiveAlgorithm(
+            topo, [Condition(0, 0, frozenset([0]))], [])
+        trivial.validate(mode="bulk")
+        trivial.validate(mode="oracle")
