@@ -1,13 +1,16 @@
-"""Hierarchical synthesis benchmarks (fig_hier_*): the ISSUE-3 scale gate.
+"""Hierarchical synthesis benchmarks (fig_hier_*): the ISSUE-3/4 scale gate.
 
 Three row families:
 
-* ``fig_hier_{ag,a2a}_<n>`` — cold hierarchical synthesis + full validation
-  on multi-pod fabrics (the ≥1024-NPU rows are the headline: flat synthesis
-  at that size is minutes-to-hours; hierarchical must land in seconds).
-  ``us_per_call`` is synthesis wall time; validation time rides in meta.
+* ``fig_hier_{ag,a2a,rs,ar}_<n>`` — cold hierarchical synthesis + full
+  validation on multi-pod fabrics (the ≥1024-NPU rows are the headline:
+  flat synthesis at that size is minutes-to-hours; hierarchical must land
+  in seconds — including the reduction collectives, which compose per-pod
+  reduce phases via the reversed-fabric trick). ``us_per_call`` is
+  synthesis wall time; validation time rides in meta.
 * ``fig_hier_vs_flat_<kind>`` — simulated-makespan ratio hierarchical/flat
-  on a fabric small enough for flat synthesis (the <= 1.25x bound).
+  on a fabric small enough for flat synthesis (<= 1.25x for the forward
+  collectives, <= 1.0x for the reductions).
 * ``fig_hier_reuse`` — registry amortization: N isomorphic pods cost one
   intra/scatter synthesis each.
 """
@@ -47,11 +50,13 @@ def run(full: bool = False) -> list[Row]:
         n = pods * r * c
         rows.append(_cold_row(f"fig_hier_ag_{n}", topo, "all_gather"))
         rows.append(_cold_row(f"fig_hier_a2a_{n}", topo, "all_to_all"))
+        rows.append(_cold_row(f"fig_hier_rs_{n}", topo, "reduce_scatter"))
+        rows.append(_cold_row(f"fig_hier_ar_{n}", topo, "all_reduce"))
 
     # -- hierarchical vs flat makespan on a flat-feasible fabric -----------
     topo = multi_pod(2, 4, 8, unit_links=True)
     eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
-    for kind in ("all_gather", "all_to_all"):
+    for kind in ("all_gather", "all_to_all", "reduce_scatter", "all_reduce"):
         hier, hier_us = timed(getattr(eng, kind), topo.npus)
         flat, flat_us = timed(getattr(eng, kind), topo.npus,
                               hierarchy="never")

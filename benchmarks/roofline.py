@@ -21,7 +21,7 @@ import json
 import os
 
 from benchmarks.common import Row
-from repro.configs import REGISTRY, SHAPES, get_config
+from repro.configs import SHAPES, get_config
 
 PEAK_FLOPS = 197e12  # TPU v5e bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip

@@ -38,7 +38,7 @@ def main():
     a2a = synthesize_all_to_all(topo, full)
     a2a.validate()
     direct = direct_all_to_all(topo, full)
-    print(f"\nAll-to-All over all 16 NPUs:")
+    print("\nAll-to-All over all 16 NPUs:")
     print(f"  PCCL makespan   = {a2a.makespan}")
     print(f"  Direct makespan = {direct.makespan}")
     print(f"  speedup         = {direct.makespan / a2a.makespan:.2f}x")

@@ -45,7 +45,7 @@ def main():
         groups.append((f"ep_row{r}", all_to_all(row, ids=row_ids, bytes=1.0)))
     alg = synthesize_joint(pod, groups)
     alg.validate()
-    print(f"\n8x8 pod, 8 concurrent EP All-to-All groups:")
+    print("\n8x8 pod, 8 concurrent EP All-to-All groups:")
     print(f"  makespan={alg.makespan:.1f} us, transfers={alg.num_transfers}")
     print(f"  links used: {len(alg.link_busy_time())}/{pod.num_links}")
 

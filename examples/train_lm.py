@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.jaxcompat import make_mesh

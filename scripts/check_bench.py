@@ -1,0 +1,226 @@
+"""Benchmark-regression gate: compare a fresh quick-mode ``benchmarks.run``
+pass against the committed ``BENCH_synthesis.json`` baseline.
+
+``BENCH_synthesis.json`` is the repo's performance record; this script makes
+it an enforced contract instead of a log. Two classes of fields:
+
+* **deterministic metrics** (simulated makespans, transfer counts, registry
+  miss counts, speedup/bandwidth ratios) must not regress — synthesis is
+  deterministic, so any drift is a real schedule-quality change. Worse than
+  baseline (beyond ``--rtol``) fails the gate; better than baseline passes
+  and is called out so the baseline can be refreshed.
+* **wall-clock fields** (``us`` per row, ``validate_s`` etc.) are
+  report-only: CI machines vary, so drift beyond a generous tolerance is
+  flagged in the report but never fails the run.
+
+Rows are matched by name and compared only when their config-identifying
+fields (npus, pods, groups, ...) agree — quick and ``--full`` runs reuse
+some row names at different sizes. The comparison report is written as JSON
+(for the CI artifact) and summarized on stdout.
+
+Usage:
+    python scripts/check_bench.py                  # run quick bench, compare
+    python scripts/check_bench.py --fresh F.json   # compare existing files
+    python scripts/check_bench.py --report out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_BASELINE = os.path.join(_ROOT, "BENCH_synthesis.json")
+_BENCH_OUT = _BASELINE  # benchmarks.run writes to the repo-root path
+
+# deterministic per-row meta fields and their better-direction
+LOWER_BETTER = {"makespan", "transfers", "hier_makespan", "ratio",
+                "pccl_t", "misses"}
+HIGHER_BETTER = {"speedup", "pccl_rel_bw"}
+# fields identifying the row's configuration; a mismatch means the two rows
+# measured different problems (quick vs full sizes) and must not be compared.
+# Note "algo" is deliberately NOT a config key: an accidental reroute from
+# the hierarchical to the flat path shows up as a metric regression instead
+# of silently skipping the row.
+CONFIG_KEYS = ("npus", "pods", "groups", "pg_size", "chunks_per_pair",
+               "chunks_per_npu", "rows")
+# wall-clock drift beyond this factor is flagged (report-only)
+WALL_CLOCK_TOLERANCE = 3.0
+
+
+def parse_meta(meta: str) -> dict[str, object]:
+    """``k=v;k=v`` meta string -> {k: float|str} (floats where they parse)."""
+    out: dict[str, object] = {}
+    for part in meta.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def run_quick_bench() -> tuple[dict[str, dict], list[str]]:
+    """Run the quick benchmark suite in a subprocess; return its rows plus
+    any ``<module>_FAILED`` markers (a crashed benchmark module prints the
+    marker instead of rows, so it must fail the gate, not slip through as
+    silently-missing rows).
+
+    ``benchmarks.run`` writes BENCH_synthesis.json in place; the committed
+    baseline bytes are restored afterwards so the gate never mutates the
+    file it guards."""
+    saved = None
+    if os.path.exists(_BASELINE):
+        with open(_BASELINE, "rb") as f:
+            saved = f.read()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run"], cwd=_ROOT, env=env,
+            capture_output=True, text=True,
+        )
+        sys.stderr.write(proc.stderr)
+        if proc.returncode != 0:
+            sys.stdout.write(proc.stdout)
+            raise SystemExit(
+                f"benchmarks.run failed with exit code {proc.returncode}")
+        fresh = load_rows(_BENCH_OUT)
+    finally:
+        if saved is not None:
+            with open(_BASELINE, "wb") as f:
+                f.write(saved)
+    failed = [line.split(",", 1)[0] for line in proc.stdout.splitlines()
+              if line.split(",", 1)[0].endswith("_FAILED")]
+    return fresh, failed
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            rtol: float) -> dict:
+    """Build the comparison report: regressions, improvements, drift."""
+    report: dict = {"regressions": [], "improvements": [], "wall_clock": [],
+                    "skipped": [], "missing_in_fresh": [], "new_rows": []}
+    for name in sorted(fresh):
+        if name.endswith("_FAILED"):
+            report["regressions"].append(
+                {"row": name, "field": "run", "detail": "benchmark failed"})
+            continue
+        if name not in baseline:
+            report["new_rows"].append(name)
+            continue
+        bmeta = parse_meta(baseline[name].get("meta", ""))
+        fmeta = parse_meta(fresh[name].get("meta", ""))
+        mismatch = [k for k in CONFIG_KEYS
+                    if k in bmeta and k in fmeta and bmeta[k] != fmeta[k]]
+        if mismatch:
+            report["skipped"].append({"row": name, "config_diff": mismatch})
+            continue
+        for field in sorted(set(bmeta) & set(fmeta)):
+            direction = (-1 if field in LOWER_BETTER
+                         else +1 if field in HIGHER_BETTER else 0)
+            if not direction:
+                continue
+            b, f = bmeta[field], fmeta[field]
+            if not isinstance(b, float) or not isinstance(f, float):
+                continue
+            worse = direction * (f - b)  # negative = regression
+            scale = max(abs(b), 1e-12)
+            if worse < -rtol * scale:
+                report["regressions"].append(
+                    {"row": name, "field": field, "baseline": b, "fresh": f})
+            elif worse > rtol * scale:
+                report["improvements"].append(
+                    {"row": name, "field": field, "baseline": b, "fresh": f})
+        # wall-clock drift (report-only): per-row us
+        bus, fus = baseline[name].get("us", 0.0), fresh[name].get("us", 0.0)
+        if bus > 0 and fus > WALL_CLOCK_TOLERANCE * bus:
+            report["wall_clock"].append(
+                {"row": name, "baseline_us": bus, "fresh_us": fus,
+                 "factor": round(fus / bus, 2)})
+    report["missing_in_fresh"] = sorted(
+        n for n in baseline if n not in fresh)
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=_BASELINE,
+                    help="baseline BENCH json (default: committed file)")
+    ap.add_argument("--fresh", default=None,
+                    help="pre-recorded fresh BENCH json (skips running the "
+                         "quick benchmark suite)")
+    ap.add_argument("--report", default=None,
+                    help="write the comparison report JSON here")
+    ap.add_argument("--rtol", type=float, default=1e-6,
+                    help="relative tolerance on deterministic fields")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    if args.fresh:
+        fresh, failed = load_rows(args.fresh), []
+    else:
+        fresh, failed = run_quick_bench()
+    report = compare(baseline, fresh, args.rtol)
+    for tag in failed:
+        report["regressions"].append(
+            {"row": tag, "field": "run", "detail": "benchmark module crashed"})
+    report["baseline"] = os.path.abspath(args.baseline)
+    report["rows_compared"] = len(set(baseline) & set(fresh))
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1)
+            f.write("\n")
+
+    print(f"compared {report['rows_compared']} rows against "
+          f"{os.path.basename(args.baseline)}")
+    # coverage changes are loud (a silently dropped row family should be
+    # visible in the CI log, not only inside the JSON artifact), but only
+    # rows the baseline marks as quick-reproducible can fail the gate —
+    # full-mode-only rows are always absent from a quick pass
+    if report["new_rows"]:
+        print(f"NEW       {len(report['new_rows'])} row(s) not in baseline: "
+              f"{', '.join(report['new_rows'][:8])}"
+              f"{' ...' if len(report['new_rows']) > 8 else ''} "
+              f"(add them by refreshing the baseline)")
+    if report["missing_in_fresh"]:
+        print(f"MISSING   {len(report['missing_in_fresh'])} baseline row(s) "
+              f"not produced by this run (full-mode-only rows are expected "
+              f"here): {', '.join(report['missing_in_fresh'][:8])}"
+              f"{' ...' if len(report['missing_in_fresh']) > 8 else ''}")
+    for sk in report["skipped"]:
+        print(f"SKIPPED   {sk['row']}: config mismatch on "
+              f"{','.join(sk['config_diff'])}")
+    for imp in report["improvements"]:
+        print(f"IMPROVED  {imp['row']}: {imp['field']} "
+              f"{imp['baseline']} -> {imp['fresh']} (refresh the baseline)")
+    for wc in report["wall_clock"]:
+        print(f"DRIFT     {wc['row']}: us {wc['baseline_us']:.0f} -> "
+              f"{wc['fresh_us']:.0f} ({wc['factor']}x, report-only)")
+    for reg in report["regressions"]:
+        if reg["field"] == "run":
+            print(f"REGRESSED {reg['row']}: {reg['detail']}")
+        else:
+            print(f"REGRESSED {reg['row']}: {reg['field']} "
+                  f"{reg['baseline']} -> {reg['fresh']}")
+    if report["regressions"]:
+        print(f"FAIL: {len(report['regressions'])} regression(s)")
+        return 1
+    print("OK: no deterministic regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

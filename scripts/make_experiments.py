@@ -8,7 +8,6 @@ import sys
 sys.path.insert(0, "src")
 
 from benchmarks.roofline import (  # noqa: E402
-    MESH_CHIPS,
     analyze_cell,
     improvement_hint,
 )

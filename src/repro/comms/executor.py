@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.translate import PpermuteProgram, Send
+from repro.core.translate import PpermuteProgram
 
 
 @dataclass

@@ -4,7 +4,7 @@ dense / MoE / SSM / hybrid / enc-dec / VLM-backbone / audio-backbone."""
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

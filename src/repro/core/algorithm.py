@@ -30,6 +30,13 @@ _EPS = 1e-6
 _VECTOR_SORT_MIN = 1 << 17
 
 
+class _NotInForest(Exception):
+    """Internal: a reduction schedule is not in the in-forest normal form
+    the bulk validator's structural shortcut covers — defer the verdict to
+    the reference oracle (which rejects the genuinely broken schedules and
+    accepts valid-but-nonstandard ones)."""
+
+
 @dataclass(frozen=True, slots=True)
 class Transfer:
     """Chunk moves src -> dst over `link` during [start, end)."""
@@ -110,12 +117,12 @@ class CollectiveAlgorithm:
         """Replay the schedule and check every synthesizer invariant.
 
         ``mode="auto"`` dispatches million-transfer schedules of the
-        *unconstrained* class (no reductions, every switch unlimited and
-        multicast-capable) to a vectorized implementation of the same
-        checks — identical accept/reject behavior, enforced by the
-        differential tests in ``tests/test_validation_bulk.py`` — and
-        everything else to the reference oracle. ``"oracle"``/``"bulk"``
-        force a path."""
+        *unconstrained* class (every switch unlimited and
+        multicast-capable; reductions in the in-forest normal form PCCL
+        synthesizes) to a vectorized implementation of the same checks —
+        identical accept/reject behavior, enforced by the differential
+        tests in ``tests/test_validation_bulk.py`` — and everything else
+        to the reference oracle. ``"oracle"``/``"bulk"`` force a path."""
         if mode not in ("auto", "oracle", "bulk"):
             raise ValueError(f"mode={mode!r} not in auto/oracle/bulk")
         if mode == "oracle":
@@ -125,7 +132,7 @@ class CollectiveAlgorithm:
         ) and self._bulk_validatable()
         if mode == "bulk" and not eligible:
             raise ValueError(
-                "bulk validation requires plain conditions and "
+                "bulk validation requires plain/reduce conditions and "
                 "unconstrained switches"
             )
         if eligible:
@@ -133,20 +140,40 @@ class CollectiveAlgorithm:
         return self._validate_oracle()
 
     def _bulk_validatable(self) -> bool:
-        return (
-            all(type(c) is Condition for c in self.conditions)
-            and not any(t.reduce for t in self.transfers)
-            and all(n.buffer_limit is None and n.multicast
-                    for n in self.topology.nodes)
-        )
+        if not all(n.buffer_limit is None and n.multicast
+                   for n in self.topology.nodes):
+            return False
+        if not all(type(c) in (Condition, ReduceCondition)
+                   for c in self.conditions):
+            return False
+        # reduce transfers must ride reduction chunks — a reduce-flagged
+        # copy of a plain chunk is a nonstandard schedule the oracle judges
+        # with its full replay, so keep it there
+        rchunks = {c.chunk for c in self.conditions
+                   if type(c) is ReduceCondition}
+        return all(t.chunk in rchunks for t in self.transfers if t.reduce)
 
     def _validate_bulk(self) -> None:
-        """Vectorized validation for plain-condition schedules on
-        unconstrained fabrics. Check-for-check equivalent to the oracle:
-        link endpoints and alpha-beta durations, adjacent-interval
-        congestion per link, release bounds, store-and-forward causality
-        (a chunk departs a node only at/after its earliest arrival there),
-        and post-condition delivery."""
+        """Vectorized validation for schedules on unconstrained fabrics.
+        Check-for-check equivalent to the oracle: link endpoints and
+        alpha-beta durations, adjacent-interval congestion per link, release
+        bounds, store-and-forward causality (a chunk departs a node only
+        at/after its earliest arrival there), and post-condition delivery.
+
+        Reduction schedules are checked against the in-forest normal form
+        every PCCL reduction synthesizes (flat reversed-gather and
+        hierarchical phase-composed alike): per chunk, reduce transfers form
+        an in-forest in which each device forwards its accumulated partial
+        at most once and only after every partial merged into it arrived;
+        all chains terminate at a single root, where the full contribution
+        set assembles; plain copies of the chunk flow only from that root,
+        no earlier than assembly. Within that class the verdict matches the
+        oracle's replay (each contribution delivered exactly once, no
+        partial-state copies). A schedule outside the normal form — e.g. a
+        hand-written one that reduce-forwards an already-assembled chunk —
+        is handed to the oracle for the final verdict instead of being
+        rejected structurally, so ``validate`` returns the same answer at
+        every size and through every mode."""
         topo = self.topology
         ts = self.transfers
         conds = self.conditions
@@ -157,6 +184,7 @@ class CollectiveAlgorithm:
         dst = np.fromiter((t.dst for t in ts), np.int64, n)
         start = np.fromiter((t.start for t in ts), float, n)
         end = np.fromiter((t.end for t in ts), float, n)
+        red = np.fromiter((t.reduce for t in ts), bool, n)
 
         if n and (link.min() < 0 or link.max() >= topo.num_links):
             raise AssertionError("transfer references unknown link")
@@ -179,10 +207,8 @@ class CollectiveAlgorithm:
             raise AssertionError("transfer moves unknown chunk")
         csize = np.fromiter((c.bytes for c in conds), float, len(conds))
         crel = np.fromiter((c.release for c in conds), float, len(conds))
-        corigin = np.fromiter((c.src for c in conds), np.int64, len(conds))
         sizes = csize[cidx][pos] if n else csize[:0]
         rel = crel[cidx][pos] if n else crel[:0]
-        origin = corigin[cidx][pos] if n else corigin[:0]
 
         alpha = np.fromiter((l.alpha for l in topo.links), float,
                             topo.num_links)
@@ -211,27 +237,65 @@ class CollectiveAlgorithm:
             k = int((start < rel - _EPS).argmax())
             raise AssertionError(f"{ts[k]}: starts before chunk release")
 
-        # earliest arrival per (chunk, node), origins at release
         nn = topo.num_nodes
-        akey = pos * nn + dst
+        # per-upos condition views (uchunks[j] is the chunk of conds[cidx[j]])
+        is_rc_u = np.fromiter(
+            (type(conds[i]) is ReduceCondition for i in cidx), bool,
+            len(cidx))
+        origin_u = np.fromiter(
+            (getattr(conds[i], "src", -1) for i in cidx), np.int64, len(cidx))
+        rel_u = crel[cidx]
+        rel_eff_u = rel_u
+
+        # -- reduction algebra: in-forest per chunk -------------------------
+        if is_rc_u.any():
+            try:
+                origin_u, rel_eff_u = self._bulk_reduce_structure(
+                    conds, cidx, uchunks, is_rc_u, origin_u, rel_u,
+                    pos, src, dst, start, end, red, nn)
+            except _NotInForest:
+                # outside the normal form PCCL synthesizes: the structural
+                # shortcut does not apply, so the reference replay decides
+                return self._validate_oracle()
+
+        # earliest copy arrival per (chunk, node), origins at release (for
+        # reduced chunks: at the root, at assembly time)
+        cp = np.nonzero(~red)[0]
+        akey = (pos * nn + dst)[cp]
         ukey, inv = np.unique(akey, return_inverse=True)
         amin = np.full(len(ukey), np.inf)
-        np.minimum.at(amin, inv, end)
+        np.minimum.at(amin, inv, end[cp])
 
-        if len(ukey):
-            skey = pos * nn + src
-            sloc = np.minimum(np.searchsorted(ukey, skey), len(ukey) - 1)
-            found = ukey[sloc] == skey
-            arr = np.where(found, amin[sloc], np.inf)
-            arr = np.where(src == origin, np.minimum(arr, rel), arr)
-            bad = start < arr - _EPS
+        if len(cp):
+            origin_t = origin_u[pos[cp]]
+            rel_eff_t = rel_eff_u[pos[cp]]
+            skey2 = (pos * nn + src)[cp]
+            if len(ukey):
+                sloc = np.minimum(np.searchsorted(ukey, skey2),
+                                  len(ukey) - 1)
+                found = ukey[sloc] == skey2
+                arr = np.where(found, amin[sloc], np.inf)
+            else:
+                arr = np.full(len(cp), np.inf)
+            arr = np.where(src[cp] == origin_t,
+                           np.minimum(arr, rel_eff_t), arr)
+            bad = start[cp] < arr - _EPS
             if bad.any():
-                k = int(bad.argmax())
+                # a "bad" copy of a reduced chunk may be legal outside the
+                # normal form (a mid-chain node that assembled the full set
+                # may copy it onward) — the oracle decides those; a bad copy
+                # of a plain chunk is a definite causality violation
+                bad_plain = bad & ~is_rc_u[pos[cp]]
+                if not bad_plain.any():
+                    return self._validate_oracle()
+                k = int(cp[int(bad_plain.argmax())])
+                a = arr[int(bad_plain.argmax())]
                 raise AssertionError(
                     f"{ts[k]}: departs before chunk arrived "
-                    f"(arr={arr[k] if np.isfinite(arr[k]) else None})")
+                    f"(arr={a if np.isfinite(a) else None})")
 
-        # post-conditions: every destination reached (or holds from origin)
+        # post-conditions: every destination reached (or holds from origin /
+        # is the assembly root)
         pk, pd = [], []
         for ci, c in enumerate(conds):
             for d in c.dests:
@@ -239,15 +303,104 @@ class CollectiveAlgorithm:
                 pd.append(d)
         pk = np.asarray(pk, np.int64)
         pd = np.asarray(pd, np.int64)
-        got = pd == corigin[pk]
+        cond_upos = np.searchsorted(uchunks, cchunk)
+        got = pd == origin_u[cond_upos[pk]]
         if len(ukey):
-            dkey = np.searchsorted(uchunks, cchunk[pk]) * nn + pd
+            dkey = cond_upos[pk] * nn + pd
             dloc = np.minimum(np.searchsorted(ukey, dkey), len(ukey) - 1)
             got |= ukey[dloc] == dkey
         if not got.all():
-            k = int((~got).argmax())
+            # an unreached dest of a reduced chunk may still hold the full
+            # set outside the normal form (an interior forest node that
+            # assembled it before forwarding) — defer those to the oracle;
+            # a missing plain-chunk delivery is definite
+            miss_plain = ~got & ~is_rc_u[cond_upos[pk]]
+            if not miss_plain.any():
+                return self._validate_oracle()
+            k = int(miss_plain.argmax())
             raise AssertionError(
                 f"chunk {conds[pk[k]].chunk} never reached NPU {pd[k]}")
+
+    @staticmethod
+    def _bulk_reduce_structure(conds, cidx, uchunks, is_rc_u, origin_u,
+                               rel_u, pos, src, dst, start, end, red, nn):
+        """Verify the in-forest normal form of the reduce transfers and
+        return the effective (origin, release) per chunk for the copy-phase
+        checks: per reduce chunk, its single assembly root and the time the
+        full contribution set assembles there. Raises :class:`_NotInForest`
+        when the schedule is outside the normal form — the caller then hands
+        the verdict to the reference oracle."""
+        su, sn = [], []
+        for j, ci in enumerate(cidx):
+            c = conds[ci]
+            if type(c) is ReduceCondition:
+                for s in c.srcs:
+                    su.append(j)
+                    sn.append(s)
+        skey = np.asarray(su, np.int64) * nn + np.asarray(sn, np.int64)
+        skey.sort()
+
+        ridx = np.nonzero(red)[0]
+        rpos, rsrc, rdst = pos[ridx], src[ridx], dst[ridx]
+        rstart, rend = start[ridx], end[ridx]
+        if len(ridx) and not is_rc_u[rpos].all():
+            raise _NotInForest("reduce transfer on a non-reduction chunk")
+        # each device forwards its accumulated partial at most once
+        okey = rpos * nn + rsrc
+        u_out, out_counts = np.unique(okey, return_counts=True)
+        if (out_counts > 1).any():
+            raise _NotInForest("a node forwards its partial twice")
+        # latest merged-partial arrival per (chunk, node)
+        ikey = rpos * nn + rdst
+        u_in, inv_in = np.unique(ikey, return_inverse=True)
+        in_max = np.full(len(u_in), -np.inf)
+        np.maximum.at(in_max, inv_in, rend)
+        if len(u_in):
+            loc = np.minimum(np.searchsorted(u_in, okey), len(u_in) - 1)
+            has_in = u_in[loc] == okey
+            need = np.where(has_in, in_max[loc], -np.inf)
+        else:
+            has_in = np.zeros(len(okey), bool)
+            need = np.full(len(okey), -np.inf)
+        if (rstart < need - _EPS).any():
+            raise _NotInForest("a partial forwards before every merged "
+                               "contribution arrived")
+        # senders that merged nothing must be declared contributors
+        if len(skey):
+            loc = np.minimum(np.searchsorted(skey, okey), len(skey) - 1)
+            is_src_sender = skey[loc] == okey
+        else:
+            is_src_sender = np.zeros(len(okey), bool)
+        if (~has_in & ~is_src_sender).any():
+            raise _NotInForest("a reduce sender holds no contribution")
+        # every participant (contributor or merge point) forwards except
+        # exactly one root per chunk, where the full set assembles;
+        # acyclicity comes from the arrival-before-forward check above
+        pkeys = np.union1d(skey, u_in)
+        if len(u_out):
+            loc = np.minimum(np.searchsorted(u_out, pkeys), len(u_out) - 1)
+            has_out = u_out[loc] == pkeys
+        else:
+            has_out = np.zeros(len(pkeys), bool)
+        roots = pkeys[~has_out]
+        root_upos = roots // nn
+        counts = np.zeros(len(uchunks), np.int64)
+        np.add.at(counts, root_upos, 1)
+        if (is_rc_u & (counts != 1)).any():
+            raise _NotInForest("contributions do not assemble at a single "
+                               "root")
+        root_node = np.full(len(uchunks), -1, np.int64)
+        root_node[root_upos] = roots % nn
+        assembled = rel_u.copy()
+        if len(u_in):
+            loc = np.minimum(np.searchsorted(u_in, roots), len(u_in) - 1)
+            found = u_in[loc] == roots
+            assembled[root_upos] = np.maximum(
+                assembled[root_upos],
+                np.where(found, in_max[loc], -np.inf))
+        # copies of a reduced chunk originate at its root, post-assembly
+        return (np.where(is_rc_u, root_node, origin_u),
+                np.where(is_rc_u, assembled, rel_u))
 
     def _validate_oracle(self) -> None:
         topo = self.topology

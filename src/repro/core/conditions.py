@@ -11,7 +11,7 @@ non-reduction algorithm (paper §4.5).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from functools import cached_property
 
 
@@ -214,3 +214,26 @@ def all_reduce(group: list[int], ids: ChunkIds | None = None,
 
 def with_release(conds: list[Condition], release: float) -> list[Condition]:
     return [replace(c, release=release) for c in conds]
+
+
+def gather_view(rconds: list[ReduceCondition],
+                tag: str = "rev_gather") -> list[Condition]:
+    """The broadcast/gather dual of single-destination reduce conditions.
+
+    PCCL synthesizes reductions by reversal (paper §4.5): a chunk reduced
+    from ``srcs`` onto one root is the time-reversal of that chunk being
+    multicast from the root to ``srcs`` on the link-reversed fabric. This
+    helper produces those dual conditions — chunk ids carry over, so the
+    reversed schedule maps back onto the reduce conditions positionally.
+    Both the flat engine internals and the hierarchical pipeline share it.
+    """
+    out = []
+    for r in rconds:
+        if len(r.dests) != 1:
+            raise ValueError(
+                f"chunk {r.chunk}: gather_view needs a single reduction "
+                f"root, got dests={sorted(r.dests)}"
+            )
+        out.append(Condition(r.chunk, next(iter(r.dests)), r.srcs,
+                             bytes=r.bytes, tag=tag))
+    return out

@@ -81,6 +81,41 @@ class PhasePlan:
 
 
 # ---------------------------------------------------------------------------
+# Time reversal (paper §4.5, Fig. 8)
+# ---------------------------------------------------------------------------
+
+def time_reversed(
+    forward_topo: Topology,
+    alg: CollectiveAlgorithm,
+    reduce_conds: list,
+    *,
+    name: str | None = None,
+) -> CollectiveAlgorithm:
+    """Reverse a (broadcast/all-gather style) algorithm synthesized on the
+    reversed topology into a reduction algorithm on the forward topology.
+
+    Link k of ``reversed(topo)`` is link k of ``topo`` with endpoints swapped
+    (by construction), so link ids carry over directly. A transfer at [s, e)
+    maps to [T - e, T - s): out-trees become in-trees and causality is
+    preserved (child partials arrive before the parent forwards its own
+    partial). Phase provenance is carried over with spans mirrored into the
+    reversed clock, in reversed execution order — the scatter phases of a
+    hierarchical broadcast become the leaf reduce phases of the reduction.
+    """
+    T = max((t.end for t in alg.transfers), default=0.0)
+    base = min((c.release for c in reduce_conds), default=0.0)
+    rev = [
+        Transfer(t.chunk, t.link, t.dst, t.src, base + T - t.end,
+                 base + T - t.start, reduce=True)
+        for t in alg.transfers
+    ]
+    spans = [(ph, base + T - hi, base + T - lo)
+             for ph, lo, hi in reversed(alg.phase_spans)]
+    return CollectiveAlgorithm(forward_topo, list(reduce_conds), rev,
+                               name=name or alg.name, phase_spans=spans)
+
+
+# ---------------------------------------------------------------------------
 # Distances for condition ordering (Algorithm 3, lines 1-7)
 # ---------------------------------------------------------------------------
 
@@ -640,17 +675,33 @@ class SynthesisEngine:
             self._hier = HierarchicalSynthesizer(self)
         return self._hier
 
-    def _route_hierarchical(self, hierarchy: str, group) -> bool:
+    def _route_hierarchical(self, hierarchy: str, group) -> tuple[bool, tuple]:
         """Resolve a ``hierarchy`` policy ("auto"/"always"/"never") for one
         group: "auto" takes the hierarchical path exactly when the fabric is
-        partitioned and the group spans pods."""
-        if hierarchy == "never" or self.topology.partition is None:
-            return False
+        partitioned and the group spans pods. Returns ``(use_hier,
+        route_params)`` — the latter goes into the registry key, and keeps
+        "always" distinct from "auto": an auto call may legitimately fall
+        back to a flat plan on a HierarchyError and cache it, but "always"
+        must re-attempt the hierarchical route (and raise) instead of being
+        served that cached flat fallback. On an unpartitioned fabric
+        "always" is unsatisfiable and raises outright — a caller pinning
+        the pod-aware path must not silently receive flat synthesis."""
         if hierarchy == "always":
-            return True
+            if self.topology.partition is None:
+                from repro.core.hierarchy import HierarchyError
+
+                raise HierarchyError(
+                    f"hierarchy='always' on {self.topology.name}: the "
+                    f"fabric has no partition (set_partition was never "
+                    f"called), so the hierarchical path cannot be taken"
+                )
+            return True, (True, True)
+        if hierarchy == "never" or self.topology.partition is None:
+            return False, (False, False)
         if hierarchy != "auto":
             raise ValueError(f"hierarchy={hierarchy!r} not in auto/always/never")
-        return self.hierarchical().spans_pods(group)
+        use = self.hierarchical().spans_pods(group)
+        return use, (use, False)
 
     # -- named collectives --------------------------------------------------
 
@@ -659,7 +710,7 @@ class SynthesisEngine:
         chunks_per_npu: int = 1, ids: ChunkIds | None = None,
         hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
-        use_hier = self._route_hierarchical(hierarchy, group)
+        use_hier, route = self._route_hierarchical(hierarchy, group)
 
         def synth(g: list[int]) -> CollectiveAlgorithm:
             if use_hier:
@@ -676,14 +727,14 @@ class SynthesisEngine:
             return self.synthesize(conds, name="pccl_all_gather")
 
         return self._routed("all_gather", group, synth,
-                            params=(bytes, chunks_per_npu, use_hier), ids=ids)
+                            params=(bytes, chunks_per_npu, route), ids=ids)
 
     def all_to_all(
         self, group: Sequence[int], *, bytes: float = 1.0,
         chunks_per_pair: int = 1, ids: ChunkIds | None = None,
         hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
-        use_hier = self._route_hierarchical(hierarchy, group)
+        use_hier, route = self._route_hierarchical(hierarchy, group)
 
         def synth(g: list[int]) -> CollectiveAlgorithm:
             if use_hier:
@@ -700,7 +751,7 @@ class SynthesisEngine:
             return self.synthesize(conds, name="pccl_all_to_all")
 
         return self._routed("all_to_all", group, synth,
-                            params=(bytes, chunks_per_pair, use_hier), ids=ids)
+                            params=(bytes, chunks_per_pair, route), ids=ids)
 
     def reduce(
         self, group: Sequence[int], root: int, *, bytes: float = 1.0,
@@ -718,23 +769,51 @@ class SynthesisEngine:
     def reduce_scatter(
         self, group: Sequence[int], *, bytes: float = 1.0,
         chunks_per_npu: int = 1, ids: ChunkIds | None = None,
+        hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
+        use_hier, route = self._route_hierarchical(hierarchy, group)
+
         def synth(g: list[int]) -> CollectiveAlgorithm:
+            if use_hier:
+                from repro.core.hierarchy import HierarchyError
+
+                try:
+                    return self.hierarchical().reduce_scatter(
+                        g, bytes=bytes, chunks_per_npu=chunks_per_npu)
+                except HierarchyError:
+                    if hierarchy == "always":
+                        raise
             return self._reduce_scatter_impl(g, bytes=bytes,
                                              chunks_per_npu=chunks_per_npu)
 
         return self._routed("reduce_scatter", group, synth,
-                            params=(bytes, chunks_per_npu), ids=ids)
+                            params=(bytes, chunks_per_npu, route), ids=ids)
 
     def all_reduce(
         self, group: Sequence[int], *, bytes: float = 1.0,
         ids: ChunkIds | None = None, pipelined: bool = False,
+        hierarchy: str = "auto",
     ) -> CollectiveAlgorithm:
+        """All-Reduce = Reduce-Scatter then All-Gather. Pod-spanning groups
+        on partitioned fabrics route hierarchically (both halves composed
+        through the pod-aware pipeline); ``pipelined`` applies to the flat
+        route only — the hierarchical composition runs its phases on the
+        dependency floors derived by ``synthesize_plan``."""
+        use_hier, route = self._route_hierarchical(hierarchy, group)
+
         def synth(g: list[int]) -> CollectiveAlgorithm:
+            if use_hier:
+                from repro.core.hierarchy import HierarchyError
+
+                try:
+                    return self.hierarchical().all_reduce(g, bytes=bytes)
+                except HierarchyError:
+                    if hierarchy == "always":
+                        raise
             return self._all_reduce_impl(g, bytes=bytes, pipelined=pipelined)
 
         return self._routed("all_reduce", group, synth,
-                            params=(bytes, pipelined), ids=ids)
+                            params=(bytes, pipelined, route), ids=ids)
 
     # -- reduction internals (paper §4.5, Fig. 8) ---------------------------
 
@@ -743,32 +822,15 @@ class SynthesisEngine:
         alg: CollectiveAlgorithm,
         reduce_conds: list[ReduceCondition],
     ) -> CollectiveAlgorithm:
-        """Reverse a (broadcast/all-gather style) algorithm synthesized on the
-        reversed topology into a reduction algorithm on the forward topology.
-
-        Link k of reversed(topo) is link k of topo with endpoints swapped (by
-        construction), so link ids carry over directly. A transfer at [s, e)
-        maps to [T - e, T - s): in-trees become out-trees and causality is
-        preserved (child partials arrive before the parent forwards its own
-        partial)."""
-        T = max((t.end for t in alg.transfers), default=0.0)
-        base = min((c.release for c in reduce_conds), default=0.0)
-        rev = [
-            Transfer(t.chunk, t.link, t.dst, t.src, base + T - t.end,
-                     base + T - t.start, reduce=True)
-            for t in alg.transfers
-        ]
-        return CollectiveAlgorithm(self.topology, list(reduce_conds), rev,
-                                   name=alg.name)
+        """See :func:`time_reversed` — engine-local wrapper binding the
+        forward fabric."""
+        return time_reversed(self.topology, alg, reduce_conds)
 
     def _reduce_impl(
         self, group: list[int], root: int, *, bytes: float = 1.0,
     ) -> CollectiveAlgorithm:
         rconds = cnd.reduce(group, root, ids=ChunkIds(0), bytes=bytes)
-        bcast = [
-            Condition(r.chunk, root, r.srcs, bytes=r.bytes, tag="rev_bcast")
-            for r in rconds
-        ]
+        bcast = cnd.gather_view(rconds, tag="rev_bcast")
         alg = self.synthesize(bcast, name="pccl_reduce",
                               topology=self.reversed_topology())
         return self._reverse_algorithm(alg, rconds)
@@ -778,11 +840,7 @@ class SynthesisEngine:
     ) -> CollectiveAlgorithm:
         rconds = cnd.reduce_scatter(group, ids=ChunkIds(0), bytes=bytes,
                                     chunks_per_npu=chunks_per_npu)
-        ag = [
-            Condition(r.chunk, next(iter(r.dests)), r.srcs, bytes=r.bytes,
-                      tag="rev_ag")
-            for r in rconds
-        ]
+        ag = cnd.gather_view(rconds, tag="rev_ag")
         alg = self.synthesize(ag, name="pccl_reduce_scatter",
                               topology=self.reversed_topology())
         return self._reverse_algorithm(alg, rconds)

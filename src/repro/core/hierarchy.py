@@ -23,6 +23,15 @@ The phases are stitched by :meth:`SynthesisEngine.synthesize_plan` into one
 :class:`CollectiveAlgorithm` on the full fabric that the validation oracle,
 ``replay_algorithm``, and the differential suites accept unchanged.
 
+Reductions take the same pipeline through time reversal (paper §4.5, the
+TACOS reverse-topology trick applied per phase): a hierarchical
+Reduce-Scatter is the reversal of a hierarchical All-Gather synthesized on
+the link-reversed fabric (which carries the same partition metadata), and a
+hierarchical All-Reduce composes that with the forward hierarchical
+All-Gather through :class:`PhasePlan`. Per-pod broadcast plans on the
+reversed pod sub-topologies are registry-shared exactly like the forward
+ones, so N isomorphic pods still pay one synthesis per phase kind.
+
 Two pipelining regimes:
 
 * **pipelined** (small fabrics, boundary links disjoint from pod links):
@@ -45,8 +54,10 @@ import numpy as np
 
 from repro.core import conditions as cnd
 from repro.core.algorithm import CollectiveAlgorithm
-from repro.core.conditions import ChunkIds, Condition
-from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine
+from repro.core.conditions import ChunkIds, Condition, ReduceCondition
+from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine, \
+    time_reversed
+from repro.core.registry import renumber_chunks
 from repro.topology.topology import Topology, TopologyView
 
 # pipeline="auto" pipelines fabrics up to this many group members; larger
@@ -169,6 +180,7 @@ class HierarchicalSynthesizer:
         self.engine = engine
         self.topology = engine.topology
         self.registry = engine.registry
+        self._rev_hier: "HierarchicalSynthesizer | None" = None
         self._pods: dict[int, _PodCtx] = {}
         self._bview: TopologyView | None = None
         self._bdist: dict[int, list[int]] = {}  # bsub-local src -> dist row
@@ -565,6 +577,110 @@ class HierarchicalSynthesizer:
             group_size=len(group), arrival_node=egress,
             ingress_of=lambda g, q: ingress.get(g),
         )
+
+    # -- reductions (per-phase time reversal, paper §4.5 x TACOS) -----------
+
+    def _reversed(self) -> "HierarchicalSynthesizer":
+        """The hierarchical synthesizer over the link-reversed fabric.
+
+        ``Topology.reversed()`` carries partition metadata (pod membership
+        and therefore gateways are direction-agnostic), so the reversed
+        fabric exposes the same pod/boundary decomposition with every link
+        flipped — the sub-problem space reduction synthesis runs in. The
+        reversed engine shares this engine's registry, so per-pod broadcast
+        plans on reversed pod sub-topologies are cached and reused across
+        pods and across calls exactly like the forward ones."""
+        if self._rev_hier is None:
+            rev_eng = SynthesisEngine(self.engine.reversed_topology(),
+                                      registry=self.registry)
+            self._rev_hier = HierarchicalSynthesizer(rev_eng)
+            self._rev_hier.gateway_strategy = self.gateway_strategy
+        return self._rev_hier
+
+    @staticmethod
+    def _check_in_forest(alg: CollectiveAlgorithm) -> None:
+        """A reduction schedule is sound only if it is an in-forest per
+        chunk: every device forwards its accumulated partial at most once
+        (the validation oracle's ``sent_reduce`` rule). The reversed
+        hierarchical broadcast guarantees this whenever its per-chunk phase
+        trees are node-disjoint except at the gateway stitch points — true
+        for the supported fabric families; on an exotic partition where a
+        boundary route threads a second gateway of some pod, fail over to
+        flat synthesis instead of emitting an invalid plan."""
+        n = len(alg.transfers)
+        if not n:
+            return
+        nn = alg.topology.num_nodes
+        keys = np.fromiter(
+            (t.chunk * nn + t.src for t in alg.transfers), np.int64, n)
+        if len(np.unique(keys)) != n:
+            raise HierarchyError(
+                "reversed composition is not an in-forest (some device "
+                "would forward its partial twice); falling back to flat "
+                "reduction synthesis"
+            )
+
+    def reduce_scatter(
+        self, group, *, bytes: float = 1.0, chunks_per_npu: int = 1,
+        ids: ChunkIds | None = None, pipeline: str | bool = "auto",
+    ) -> CollectiveAlgorithm:
+        """Hierarchical Reduce-Scatter: the time-reversal of a hierarchical
+        All-Gather on the reversed fabric (TACOS' reverse-topology trick,
+        applied per phase through the shared pipeline).
+
+        In the reversed (broadcast) direction, each owner multicasts its
+        chunk to every contributor: an intra phase in the owner's pod, a
+        gateway exchange over the reversed boundary fabric, and per-pod
+        scatters — each phase registry-shared across isomorphic pods.
+        Reversing the composed schedule turns the scatter phases into
+        leaf partial-reductions (pod members fold into their ingress
+        gateway), the inter phase into the boundary reduce, and the intra
+        phase into the final fold onto the owner. Chunk ids correspond
+        positionally: chunk ``i`` is owned by ``group[i // chunks_per_npu]``
+        in both condition builders."""
+        group = list(group)
+        self._require(group)
+        rconds = cnd.reduce_scatter(group, ids=ChunkIds(), bytes=bytes,
+                                    chunks_per_npu=chunks_per_npu)
+        rev = self._reversed()
+        bcast = rev.all_gather(group, bytes=bytes,
+                               chunks_per_npu=chunks_per_npu,
+                               pipeline=pipeline)
+        alg = time_reversed(self.topology, bcast, rconds,
+                            name="pccl_hier_reduce_scatter")
+        self._check_in_forest(alg)
+        return renumber_chunks(alg, ids)
+
+    def all_reduce(
+        self, group, *, bytes: float = 1.0, ids: ChunkIds | None = None,
+        pipeline: str | bool = "auto",
+    ) -> CollectiveAlgorithm:
+        """Hierarchical All-Reduce: hierarchical Reduce-Scatter then
+        hierarchical All-Gather (paper §4.5), composed on one clock through
+        :class:`PhasePlan`. Both sub-collectives draw chunk ids from 0 in
+        group order, so chunk ``i`` is reduced onto — and then gathered
+        from — ``group[i]``. The All-Gather phase is floor-shifted to the
+        Reduce-Scatter's end; each chunk's full sum is assembled at its
+        owner by then, so the copies it fans out are of fully-reduced
+        state."""
+        group = list(group)
+        self._require(group)
+        rs = self.reduce_scatter(group, bytes=bytes, pipeline=pipeline)
+        ag = self.all_gather(group, bytes=bytes, pipeline=pipeline)
+        ar_conds = [
+            ReduceCondition(c.chunk, c.srcs, c.srcs, bytes=bytes)
+            for c in rs.conditions
+        ]
+        plan = PhasePlan(
+            phases=[
+                PhaseSpec("reduce_scatter", algorithm=rs),
+                PhaseSpec("all_gather", algorithm=ag,
+                          after=("reduce_scatter",)),
+            ],
+            conditions=ar_conds,
+            name="pccl_hier_all_reduce",
+        )
+        return renumber_chunks(self.engine.synthesize_plan(plan), ids)
 
     # -- stitching ----------------------------------------------------------
 

@@ -28,11 +28,11 @@ from __future__ import annotations
 import hashlib
 import os
 from collections import Counter, OrderedDict
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Sequence
 
 from repro.core.algorithm import CollectiveAlgorithm, Transfer
-from repro.core.conditions import ChunkIds, Condition, ReduceCondition
+from repro.core.conditions import ChunkIds, ReduceCondition
 from repro.topology.topology import Topology
 
 # bound on the enumerated symmetry group (torus2d 16x16 translations = 256;

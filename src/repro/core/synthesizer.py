@@ -71,20 +71,22 @@ def synthesize_reduce(
 def synthesize_reduce_scatter(
     topo: Topology, group: list[int], *,
     bytes: float = 1.0, chunks_per_npu: int = 1, ids: ChunkIds | None = None,
-    registry=None,
+    registry=None, hierarchy: str = "auto",
 ) -> CollectiveAlgorithm:
     return SynthesisEngine(topo, registry=registry).reduce_scatter(
-        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids
+        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids,
+        hierarchy=hierarchy,
     )
 
 
 def synthesize_all_reduce(
     topo: Topology, group: list[int], *,
     bytes: float = 1.0, ids: ChunkIds | None = None, pipelined: bool = False,
-    registry=None,
+    registry=None, hierarchy: str = "auto",
 ) -> CollectiveAlgorithm:
     return SynthesisEngine(topo, registry=registry).all_reduce(
-        list(group), bytes=bytes, ids=ids, pipelined=pipelined
+        list(group), bytes=bytes, ids=ids, pipelined=pipelined,
+        hierarchy=hierarchy,
     )
 
 

@@ -29,7 +29,6 @@ import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
-import jax  # noqa: E402
 
 from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable  # noqa: E402
 from repro.launch.hlo_cost import analyze as hlo_analyze  # noqa: E402

@@ -12,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.jaxcompat import make_mesh
 from repro.launch.sharding import ShardingPolicy, pad_heads
 from repro.models import LM

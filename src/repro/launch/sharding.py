@@ -239,8 +239,13 @@ class MeshCollectivePlanner:
     routed through the hierarchical synthesis pipeline automatically (the
     engine's ``hierarchy="auto"``): per-pod phases are synthesized once per
     canonical pod and stitched with an inter-pod phase, instead of paying a
-    flat whole-fabric TEN search per group. Pass ``hierarchy="never"`` to
-    force flat synthesis.
+    flat whole-fabric TEN search per group. This covers the reduction
+    collectives too — a pod-spanning ``reduce_scatter`` synthesizes as the
+    time-reversal of a hierarchical All-Gather on the reversed fabric, and
+    ``all_reduce`` composes that with the forward hierarchical All-Gather —
+    so the data-parallel gradient path, the dominant collective of
+    multi-pod training, takes the scalable route by default. Pass
+    ``hierarchy="never"`` to force flat synthesis.
     """
 
     def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None):
@@ -278,9 +283,10 @@ class MeshCollectivePlanner:
                   nbytes: float = 1.0, **kw):
         """The synthesized (or registry-served) algorithm for one group.
 
-        ``all_gather``/``all_to_all`` groups that span pods route through
-        the hierarchical pipeline automatically; override with
-        ``hierarchy="never"`` (or "always")."""
+        ``all_gather``/``all_to_all``/``reduce_scatter``/``all_reduce``
+        groups that span pods route through the hierarchical pipeline
+        automatically; override with ``hierarchy="never"`` (or
+        "always")."""
         if kind not in ("all_gather", "all_to_all", "all_reduce",
                         "reduce_scatter", "reduce"):
             raise ValueError(f"unknown collective kind {kind!r}")

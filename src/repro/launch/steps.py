@@ -11,7 +11,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, ShapeSpec, get_config
 from repro.configs.base import ModelConfig

@@ -16,11 +16,8 @@ full config directly.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.jaxcompat import make_mesh

@@ -22,8 +22,6 @@ Families:
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ schedule. Pure pytree functions: optimizer state shards exactly like params
 
 from __future__ import annotations
 
-import math
 from typing import Any, NamedTuple
 
 import jax

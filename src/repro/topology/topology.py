@@ -148,10 +148,16 @@ class Topology:
     def _invalidate_caches(self) -> None:
         """Drop memoized derived state (structure hash, automorphism closure,
         attached synthesis engines) when the graph mutates."""
+        # the reversed-view memo is symmetric: mutating either side must
+        # break BOTH backlinks, or the unchanged peer would keep serving
+        # this (no longer link-reversed) object from its cache
+        rev = getattr(self, "_rev_cache", None)
+        if rev is not None and getattr(rev, "_rev_cache", None) is self:
+            del rev._rev_cache
         for attr in ("_structure_hash", "_automorphism_closure",
                      "_pccl_engines", "_csr_cache", "_rev_dist_rows",
                      "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache",
-                     "_pod_views"):
+                     "_pod_views", "_rev_cache"):
             if hasattr(self, attr):
                 delattr(self, attr)
 
@@ -553,14 +559,28 @@ class Topology:
         return dist
 
     def reversed(self) -> "Topology":
-        """A copy with every link direction flipped (used for reduction synthesis).
+        """The link-reversed view (used for reduction synthesis), memoized.
+
+        Link ``k`` of the reversed topology is link ``k`` of this one with its
+        endpoints swapped, so link ids carry over between the two orientations
+        — the property the time-reversal trick relies on to lift reduction
+        schedules back onto the forward fabric. The view is cached and carries
+        a backlink, so ``reversed()`` of the reversed view round-trips to this
+        very object (pod sub-/boundary views derived on either orientation
+        therefore extract the same parent node/link id sets). Mutating the
+        fabric drops the cache and a fresh view is built.
 
         Derived caches are carried instead of recomputed: the reversed view's
         all-pairs hop matrix is the transpose of the forward one (link
         reversal flips every path), so an already-computed forward matrix is
         shared by value. The CSR export and per-destination rows stay lazy —
         they are direction-dependent and rebuild on first use against the
-        reversed adjacency, so no stale forward adjacency can leak."""
+        reversed adjacency, so no stale forward adjacency can leak. Partition
+        metadata (pod membership, and therefore gateways) is
+        direction-agnostic and carries over."""
+        cached_rev = getattr(self, "_rev_cache", None)
+        if cached_rev is not None:
+            return cached_rev
         rev = Topology(self.name + "_rev")
         for node in self.nodes:
             rev.add_node(node.type, node.buffer_limit, node.multicast)
@@ -573,6 +593,8 @@ class Topology:
         cached = getattr(self, "_hop_matrix_cache", None)
         if cached is not None and cached[0] is not False:
             rev._hop_matrix_cache = (cached[0].T,)
+        self._rev_cache = rev
+        rev._rev_cache = self
         return rev
 
     def __repr__(self) -> str:

@@ -1,7 +1,6 @@
 """Tests for the condition builders — notably ``all_to_allv``, which drives
 MoE expert-parallel dispatch and previously had no coverage."""
 
-import pytest
 
 from repro.core import ChunkIds, all_to_allv, synthesize
 from repro.topology import ring, torus2d

@@ -227,6 +227,154 @@ class TestPodPlanReuse:
         assert alg2.makespan == alg1.makespan
 
 
+class TestHierarchicalReductions:
+    """Reduce-Scatter/All-Reduce via per-phase time reversal: delivery
+    contract and reduction algebra against the oracle, makespan no worse
+    than flat, reversal invariants, registry reuse, and fallbacks."""
+
+    @pytest.fixture(scope="class")
+    def fabric(self):
+        return multi_pod(2, 4, 8, unit_links=True)
+
+    def _reduction_state(self, alg):
+        """Independent replay of the reduction algebra: contributions held
+        per (node, chunk) after executing the schedule in time order."""
+        holdings = {}
+        for c in alg.conditions:
+            for s in c.srcs:
+                holdings[(s, c.chunk)] = frozenset([s])
+        full = {c.chunk: c.srcs for c in alg.conditions}
+        for t in sorted(alg.transfers, key=lambda t: t.start):
+            held = holdings[(t.src, t.chunk)]
+            if t.reduce:
+                prev = holdings.get((t.dst, t.chunk), frozenset())
+                assert not (prev & held), "double-counted contribution"
+                holdings[(t.dst, t.chunk)] = prev | held
+                if held != full[t.chunk]:
+                    del holdings[(t.src, t.chunk)]
+            else:
+                holdings[(t.dst, t.chunk)] = held
+        return holdings, full
+
+    def test_reduce_scatter_matches_oracle_state(self, fabric):
+        eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
+        hier = eng.reduce_scatter(fabric.npus)
+        assert hier.name == "pccl_hier_reduce_scatter"
+        hier.validate(mode="oracle")
+        assert all(t.reduce for t in hier.transfers)
+        # every owner ends with exactly the full contribution set
+        holdings, full = self._reduction_state(hier)
+        for c in hier.conditions:
+            for d in c.dests:
+                assert holdings[(d, c.chunk)] == full[c.chunk]
+        # same ownership contract as the flat route
+        flat = eng.reduce_scatter(fabric.npus, hierarchy="never")
+        assert flat.name == "pccl_reduce_scatter"
+        flat.validate(mode="oracle")
+        key = lambda a: sorted(
+            (c.chunk, tuple(sorted(c.srcs)), tuple(sorted(c.dests)))
+            for c in a.conditions)
+        assert key(hier) == key(flat)
+
+    def test_all_reduce_composes_rs_then_ag(self, fabric):
+        eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
+        alg = eng.all_reduce(fabric.npus)
+        assert alg.name == "pccl_hier_all_reduce"
+        alg.validate(mode="oracle")
+        assert [n for n, _, _ in alg.phase_spans] == \
+            ["reduce_scatter", "all_gather"]
+        bd = phase_breakdown(alg)
+        assert bd["all_gather"]["start"] >= bd["reduce_scatter"]["end"]
+
+    @pytest.mark.parametrize("kind", ["reduce_scatter", "all_reduce"])
+    def test_makespan_not_worse_than_flat(self, fabric, kind):
+        eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
+        hier = getattr(eng, kind)(fabric.npus)
+        flat = getattr(eng, kind)(fabric.npus, hierarchy="never")
+        assert hier.makespan <= flat.makespan, (
+            f"{kind}: hierarchical {hier.makespan} vs flat {flat.makespan}")
+
+    def test_reversal_invariants(self, fabric):
+        """The reduction is an in-forest: per chunk each device forwards
+        its partial at most once, and a forward never precedes a merged
+        partial's arrival — the invariants time reversal promises."""
+        eng = SynthesisEngine(fabric)
+        alg = eng.hierarchical().reduce_scatter(fabric.npus)
+        sent = set()
+        arrivals = {}
+        for t in alg.transfers:
+            arrivals.setdefault((t.chunk, t.dst), []).append(t.end)
+        for t in alg.transfers:
+            assert (t.chunk, t.src) not in sent
+            sent.add((t.chunk, t.src))
+            for end in arrivals.get((t.chunk, t.src), ()):
+                assert t.start >= end - 1e-9
+        # reversal round-trip of the phase provenance: reversed spans run
+        # scatter (leaf reduce) -> inter -> intra (final fold)
+        names = [n for n, _, _ in alg.phase_spans]
+        assert names.index("inter") > 0
+        assert any(n.startswith("scatter:") for n in names)
+
+    def test_sequential_regime_and_registry_reuse(self):
+        topo = multi_pod(4, 4, 4, unit_links=True, dci_ports_per_pod=4)
+        reg = AlgorithmRegistry()
+        eng = SynthesisEngine(topo, registry=reg)
+        alg = eng.hierarchical().reduce_scatter(topo.npus, pipeline=False)
+        alg.validate()
+        # reversed-fabric phases share plans exactly like the forward ones:
+        # intra x4 (1 miss + 3 hits), inter (1 miss), scatter x4 (1 + 3)
+        assert reg.stats.misses == 3
+        assert reg.stats.hits == 6
+
+    def test_grid_hypercube_reductions(self):
+        topo = grid_hypercube(4, 3)  # 64 NPUs, 4 plane-pods, no switch
+        eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
+        for kind in ("reduce_scatter", "all_reduce"):
+            alg = getattr(eng, kind)(topo.npus)
+            assert alg.name.startswith("pccl_hier")
+            alg.validate()
+
+    def test_shared_device_fabric_falls_back_flat(self):
+        # two_level_switch pods share their local switches with the
+        # boundary fabric: the reversed composition would double-forward
+        # partials, so the in-forest guard routes reductions to flat
+        topo = two_level_switch(3, npus_per_node=4)
+        eng = SynthesisEngine(topo)
+        alg = eng.reduce_scatter(list(range(12)))
+        assert alg.name == "pccl_reduce_scatter"
+        alg.validate()
+        with pytest.raises(HierarchyError, match="in-forest"):
+            eng.hierarchical().reduce_scatter(list(range(12)))
+
+    def test_subgroup_spanning_pods(self, fabric):
+        group = list(range(8, 24)) + list(range(40, 56))
+        eng = SynthesisEngine(fabric)
+        alg = eng.all_reduce(group)
+        assert alg.name == "pccl_hier_all_reduce"
+        alg.validate(mode="oracle")
+
+    def test_single_pod_group_stays_flat(self, fabric):
+        eng = SynthesisEngine(fabric)
+        alg = eng.reduce_scatter(list(range(32)))  # pod 0 only
+        assert alg.name == "pccl_reduce_scatter"
+        alg.validate()
+
+    def test_planner_routes_reductions(self):
+        from repro.launch.sharding import MeshCollectivePlanner
+
+        topo = multi_pod(2, 4, 8, unit_links=True)
+        pl = MeshCollectivePlanner(
+            topo, {"pod": 2, "data": 4, "model": 8},
+            registry=AlgorithmRegistry())
+        alg = pl.algorithm("reduce_scatter", "pod", 1)
+        assert alg.name == "pccl_hier_reduce_scatter"
+        alg.validate()
+        ar = pl.algorithm("all_reduce", "pod", 0)
+        assert ar.name == "pccl_hier_all_reduce"
+        flat = pl.algorithm("reduce_scatter", "model", 0)
+        assert flat.name == "pccl_reduce_scatter"
+
+
 class TestPathReplication:
     def test_replicated_runs_stay_valid(self):
         topo = ring(6)
@@ -273,3 +421,24 @@ class TestPlannerRouting:
         alg.validate()
         flat = pl.algorithm("all_gather", "model", 0)
         assert flat.name == "pccl_all_gather"
+
+
+class TestHierarchyAlwaysPolicy:
+    def test_always_on_unpartitioned_raises(self):
+        eng = SynthesisEngine(ring(8))
+        for kind in ("all_gather", "all_to_all", "reduce_scatter",
+                     "all_reduce"):
+            with pytest.raises(HierarchyError, match="no partition"):
+                getattr(eng, kind)(list(range(8)), hierarchy="always")
+
+    def test_always_not_served_cached_auto_fallback(self):
+        """An auto call that fell back to flat must not satisfy a later
+        hierarchy="always" call through the registry: "always" re-attempts
+        the hierarchical route and raises on infeasibility."""
+        topo = two_level_switch(3, npus_per_node=4)
+        eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
+        group = list(range(12))
+        auto = eng.reduce_scatter(group)  # in-forest guard -> flat fallback
+        assert auto.name == "pccl_reduce_scatter"
+        with pytest.raises(HierarchyError):
+            eng.reduce_scatter(group, hierarchy="always")

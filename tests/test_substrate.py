@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import Checkpointer
-from repro.data import DataPipeline, synthetic_lm_batches
+from repro.data import DataPipeline
 from repro.data.pipeline import _batch_for_step
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
 from repro.runtime import ElasticMeshPlanner, FaultToleranceManager, StragglerMonitor

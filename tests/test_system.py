@@ -1,11 +1,9 @@
 """End-to-end behaviour tests for the PCCL system: synthesize -> validate ->
 translate -> evaluate, on the production pod topology."""
 
-import pytest
 
 from repro.core import (
     ChunkIds,
-    all_gather,
     all_to_all,
     all_to_allv,
     direct_all_to_all,

@@ -129,3 +129,42 @@ class TestReversedCaches:
     def test_reversed_carries_partition(self):
         topo = multi_pod(2, 2, 2)
         assert topo.reversed().partition == topo.partition
+
+    def test_reversed_round_trips(self):
+        """reversed() memoizes with a backlink: reversed-of-reversed is the
+        original object, and link ids carry over with endpoints swapped —
+        the property reduction time reversal relies on."""
+        topo = multi_pod(2, 2, 4, unit_links=True)
+        rev = topo.reversed()
+        assert topo.reversed() is rev  # memoized
+        assert rev.reversed() is topo  # round-trip
+        for f, r in zip(topo.links, rev.links):
+            assert (f.id, f.src, f.dst) == (r.id, r.dst, r.src)
+        # mutation drops the memo and a fresh view is built
+        topo.add_link(0, 1, 1.0, 1.0)
+        rev2 = topo.reversed()
+        assert rev2 is not rev
+        assert rev2.num_links == topo.num_links
+
+    def test_reversed_pod_views_round_trip(self):
+        """Pod/boundary sub-topologies derived on the reversed fabric are
+        the link-reversals of the forward ones, over identical parent
+        node/link id sets — so per-pod reduce phases lift back onto the
+        forward fabric coordinates unchanged."""
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        rev = topo.reversed()
+        for p in range(topo.num_pods):
+            f = topo.pod_subtopology(p)
+            r = rev.pod_subtopology(p)
+            assert r.nodes == f.nodes and r.links == f.links
+            assert topology_fingerprint(r.topology) == \
+                topology_fingerprint(f.topology.reversed())
+            # reversed-of-reversed pod sub-topology restores the forward
+            assert topology_fingerprint(r.topology.reversed()) == \
+                topology_fingerprint(f.topology)
+            assert rev.gateways(p) == topo.gateways(p)
+        fb = topo.boundary_subtopology()
+        rb = rev.boundary_subtopology()
+        assert rb.nodes == fb.nodes and rb.links == fb.links
+        assert topology_fingerprint(rb.topology.reversed()) == \
+            topology_fingerprint(fb.topology)
