@@ -1,6 +1,7 @@
-"""Hierarchical synthesis benchmarks (fig_hier_*): the ISSUE-3/4 scale gate.
+"""Hierarchical synthesis benchmarks (fig_hier_*): the ISSUE-3/4/5 scale
+gate.
 
-Three row families:
+Four row families:
 
 * ``fig_hier_{ag,a2a,rs,ar}_<n>`` — cold hierarchical synthesis + full
   validation on multi-pod fabrics (the ≥1024-NPU rows are the headline:
@@ -8,6 +9,11 @@ Three row families:
   in seconds — including the reduction collectives, which compose per-pod
   reduce phases via the reversed-fabric trick). ``us_per_call`` is
   synthesis wall time; validation time rides in meta.
+* ``fig_hier3_{ag,ar}_<n>`` — the multi-level (rack -> pod -> plane) rows:
+  cold synthesis + bulk validation on ``three_level`` fabrics through the
+  recursive pipeline. The ≥2048-NPU rows are fabrics the flat path cannot
+  touch at all; ``misses`` in meta is the registry-miss count, bounded by
+  (phase kinds x levels) + 1 named route regardless of fabric size.
 * ``fig_hier_vs_flat_<kind>`` — simulated-makespan ratio hierarchical/flat
   on a fabric small enough for flat synthesis (<= 1.25x for the forward
   collectives, <= 1.0x for the reductions).
@@ -19,20 +25,22 @@ from __future__ import annotations
 
 from benchmarks.common import Row, timed
 from repro.core import AlgorithmRegistry, SynthesisEngine
-from repro.topology import multi_pod
+from repro.topology import multi_pod, three_level
 
 
-def _cold_row(name: str, topo, kind: str) -> Row:
+def _cold_row(name: str, topo, kind: str, mode: str = "auto") -> Row:
     reg = AlgorithmRegistry()
     eng = SynthesisEngine(topo, registry=reg)
     alg, us = timed(getattr(eng, kind), topo.npus)
-    _, val_us = timed(alg.validate)
+    _, val_us = timed(alg.validate, mode)
     n = len(topo.npus)
     return Row(
         name, us,
-        f"npus={n};pods={topo.num_pods};makespan={alg.makespan};"
+        f"npus={n};pods={topo.num_pods};levels={topo.partition_depth + 1};"
+        f"makespan={alg.makespan};"
         f"transfers={alg.num_transfers};validate_s={val_us / 1e6:.2f};"
-        f"total_s={(us + val_us) / 1e6:.2f};algo={alg.name}",
+        f"total_s={(us + val_us) / 1e6:.2f};misses={reg.stats.misses};"
+        f"algo={alg.name}",
     )
 
 
@@ -52,6 +60,20 @@ def run(full: bool = False) -> list[Row]:
         rows.append(_cold_row(f"fig_hier_a2a_{n}", topo, "all_to_all"))
         rows.append(_cold_row(f"fig_hier_rs_{n}", topo, "reduce_scatter"))
         rows.append(_cold_row(f"fig_hier_ar_{n}", topo, "all_reduce"))
+
+    # -- multi-level (rack -> pod -> plane) recursion at scale -------------
+    # (pods, racks, npus_per_rack); bulk validation (the oracle replays
+    # millions of transfers in python — the vectorized path is the point)
+    sizes3 = [(4, 4, 4)]  # 64 NPUs, quick
+    if full:
+        sizes3 += [(8, 8, 8), (16, 16, 8)]  # 512, 2048 NPUs
+    for pods, racks, k in sizes3:
+        topo = three_level(pods, racks, k, unit_links=True)
+        n = pods * racks * k
+        rows.append(_cold_row(f"fig_hier3_ag_{n}", topo, "all_gather",
+                              mode="bulk"))
+        rows.append(_cold_row(f"fig_hier3_ar_{n}", topo, "all_reduce",
+                              mode="bulk"))
 
     # -- hierarchical vs flat makespan on a flat-feasible fabric -----------
     topo = multi_pod(2, 4, 8, unit_links=True)

@@ -49,6 +49,14 @@ CONFIG_KEYS = ("npus", "pods", "groups", "pg_size", "chunks_per_pair",
                "chunks_per_npu", "rows")
 # wall-clock drift beyond this factor is flagged (report-only)
 WALL_CLOCK_TOLERANCE = 3.0
+# row families every (quick) benchmark pass must produce at least one row
+# of — a silently dropped family (e.g. the multi-level fig_hier3_* rows
+# vanishing because three_level stopped routing hierarchically) fails the
+# gate instead of degrading into "0 rows compared, OK". Prefixes name the
+# cold-synthesis families specifically: a loose "fig_hier_" would be
+# satisfied by the fig_hier_vs_flat_*/fig_hier_reuse rows alone.
+REQUIRED_ROW_PREFIXES = ("fig_hier_ag_", "fig_hier_rs_",
+                         "fig_hier3_ag_", "fig_hier3_ar_")
 
 
 def parse_meta(meta: str) -> dict[str, object]:
@@ -151,6 +159,11 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
                  "factor": round(fus / bus, 2)})
     report["missing_in_fresh"] = sorted(
         n for n in baseline if n not in fresh)
+    for prefix in REQUIRED_ROW_PREFIXES:
+        if not any(n.startswith(prefix) for n in fresh):
+            report["regressions"].append(
+                {"row": f"{prefix}*", "field": "coverage",
+                 "detail": f"no {prefix} rows produced by this run"})
     return report
 
 
@@ -210,7 +223,7 @@ def main() -> int:
         print(f"DRIFT     {wc['row']}: us {wc['baseline_us']:.0f} -> "
               f"{wc['fresh_us']:.0f} ({wc['factor']}x, report-only)")
     for reg in report["regressions"]:
-        if reg["field"] == "run":
+        if "detail" in reg:
             print(f"REGRESSED {reg['row']}: {reg['detail']}")
         else:
             print(f"REGRESSED {reg['row']}: {reg['field']} "

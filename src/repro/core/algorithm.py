@@ -63,6 +63,9 @@ class CollectiveAlgorithm:
     name: str = "pccl"
     # Phase provenance for composed algorithms (hierarchical / PhasePlan
     # synthesis): [(phase name, first start, last end)], in execution order.
+    # Multi-level compositions record sub-phase provenance as nested
+    # "parent/child" names (e.g. "intra:0/inter" — the pod-boundary phase
+    # inside pod 0's recursive plan), whose windows lie inside the parent's.
     # Purely descriptive — validation and replay never consult it.
     phase_spans: list = field(default_factory=list)
 
@@ -84,6 +87,12 @@ class CollectiveAlgorithm:
             self.transfers = sorted(
                 ts, key=operator.attrgetter("start", "chunk", "link")
             )
+
+    def top_phase_spans(self) -> list:
+        """Top-level ``phase_spans`` entries only — nested sub-phase
+        provenance (recorded as ``"parent/child"`` names by multi-level
+        composition) filtered out."""
+        return [s for s in self.phase_spans if "/" not in s[0]]
 
     @property
     def makespan(self) -> float:

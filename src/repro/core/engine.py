@@ -99,8 +99,12 @@ def time_reversed(
     maps to [T - e, T - s): out-trees become in-trees and causality is
     preserved (child partials arrive before the parent forwards its own
     partial). Phase provenance is carried over with spans mirrored into the
-    reversed clock, in reversed execution order — the scatter phases of a
-    hierarchical broadcast become the leaf reduce phases of the reduction.
+    reversed clock and re-sorted into execution order — the scatter phases
+    of a hierarchical broadcast become the leaf reduce phases of the
+    reduction. Nested spans (``"parent/child"`` entries from multi-level
+    composition) mirror the same way; sorting by mirrored start keeps
+    parents adjacent to their children even though a parent's window
+    contains its children's.
     """
     T = max((t.end for t in alg.transfers), default=0.0)
     base = min((c.release for c in reduce_conds), default=0.0)
@@ -109,8 +113,11 @@ def time_reversed(
                  base + T - t.start, reduce=True)
         for t in alg.transfers
     ]
-    spans = [(ph, base + T - hi, base + T - lo)
-             for ph, lo, hi in reversed(alg.phase_spans)]
+    spans = sorted(
+        ((ph, base + T - hi, base + T - lo)
+         for ph, lo, hi in alg.phase_spans),
+        key=lambda s: (s[1], s[2], s[0]),
+    )
     return CollectiveAlgorithm(forward_topo, list(reduce_conds), rev,
                                name=name or alg.name, phase_spans=spans)
 
@@ -608,6 +615,12 @@ class SynthesisEngine:
             t_hi = max((t.end for t in lifted), default=floor)
             ends[ph.name] = max(t_hi, floor)
             spans.append((ph.name, t_lo, t_hi))
+            # multi-level composition: a phase that is itself a composed
+            # algorithm (a recursive pod plan, a hierarchical RS inside an
+            # All-Reduce) carries its own provenance — record it nested,
+            # shifted onto this plan's clock, as "parent/child" entries
+            for child, lo, hi in alg.phase_spans:
+                spans.append((f"{ph.name}/{child}", lo + shift, hi + shift))
         return CollectiveAlgorithm(
             self.topology, list(plan.conditions), merged, name=plan.name,
             phase_spans=spans,
@@ -685,7 +698,15 @@ class SynthesisEngine:
         must re-attempt the hierarchical route (and raise) instead of being
         served that cached flat fallback. On an unpartitioned fabric
         "always" is unsatisfiable and raises outright — a caller pinning
-        the pod-aware path must not silently receive flat synthesis."""
+        the pod-aware path must not silently receive flat synthesis.
+
+        Hierarchical routes additionally key on the *full partition-tree
+        fingerprint*: the topology structure hash is partition-blind, so
+        without it a plan cached for a 2-level view of a fabric would be
+        served verbatim for a 3-level view of the same fabric (same
+        structure, different ``set_partition``) — structurally valid but
+        the wrong decomposition. Flat routes stay fingerprint-free: flat
+        synthesis never consults the partition."""
         if hierarchy == "always":
             if self.topology.partition is None:
                 from repro.core.hierarchy import HierarchyError
@@ -695,13 +716,14 @@ class SynthesisEngine:
                     f"fabric has no partition (set_partition was never "
                     f"called), so the hierarchical path cannot be taken"
                 )
-            return True, (True, True)
+            return True, (True, True, self.topology.partition_fingerprint())
         if hierarchy == "never" or self.topology.partition is None:
-            return False, (False, False)
+            return False, (False, False, None)
         if hierarchy != "auto":
             raise ValueError(f"hierarchy={hierarchy!r} not in auto/always/never")
         use = self.hierarchical().spans_pods(group)
-        return use, (use, False)
+        return use, (use, False,
+                     self.topology.partition_fingerprint() if use else None)
 
     # -- named collectives --------------------------------------------------
 

@@ -23,6 +23,17 @@ The phases are stitched by :meth:`SynthesisEngine.synthesize_plan` into one
 :class:`CollectiveAlgorithm` on the full fabric that the validation oracle,
 ``replay_algorithm``, and the differential suites accept unchanged.
 
+The decomposition is *recursive* (pods-of-pods): partitions form a tree
+(:meth:`Topology.set_partition` with nested paths), ``pod_subtopology``
+returns a fabric carrying the next level's partition, and an intra/scatter
+phase whose conditions span the sub-fabric's own pods re-enters the
+pipeline through the generic :meth:`HierarchicalSynthesizer.spanning`
+decomposition — so a rack -> pod -> plane fabric synthesizes through three
+phase levels, with canonical per-rack plans registry-shared across every
+isomorphic rack of every pod. Nested phase provenance is recorded as
+``"parent/child"`` spans and survives time reversal, so the reduction
+collectives work at depth >= 3 unchanged.
+
 Reductions take the same pipeline through time reversal (paper §4.5, the
 TACOS reverse-topology trick applied per phase): a hierarchical
 Reduce-Scatter is the reversal of a hierarchical All-Gather synthesized on
@@ -71,11 +82,6 @@ class HierarchyError(ValueError):
     """The group/fabric cannot take the hierarchical path (no partition,
     single pod, missing gateways, unreachable pods). Callers fall back to
     flat synthesis."""
-
-
-def _dests_local(view: TopologyView, nodes) -> frozenset[int]:
-    to_local = view.to_local
-    return frozenset(to_local[n] for n in nodes)
 
 
 def _uniform_singletons(conds: list[Condition]) -> bool:
@@ -181,6 +187,10 @@ class HierarchicalSynthesizer:
         self.topology = engine.topology
         self.registry = engine.registry
         self._rev_hier: "HierarchicalSynthesizer | None" = None
+        # nested synthesizers for partitioned pod sub-topologies (the
+        # pods-of-pods recursion), keyed by object id with identity guard
+        self._nested: dict[int, tuple[Topology,
+                                      "HierarchicalSynthesizer"]] = {}
         self._pods: dict[int, _PodCtx] = {}
         self._bview: TopologyView | None = None
         self._bdist: dict[int, list[int]] = {}  # bsub-local src -> dist row
@@ -188,6 +198,9 @@ class HierarchicalSynthesizer:
         self._pod_dist_from_gw: dict[tuple[int, int], list[int]] = {}
         self._reach_cache: dict[tuple[int, int], list] = {}
         self._ingress_cache: dict[tuple[int, int], int] = {}
+        # dest-set -> {pod: members} buckets, memoized by frozenset identity
+        # (bulk collectives share ONE dests object across all conditions)
+        self._dest_buckets: dict[int, tuple] = {}
         # All-to-All gateway selection: "aligned" cycles pod-pair-aligned
         # gateway pairs (few distinct inter endpoints, longest replication
         # runs), "nearest" routes via the gateways closest to each
@@ -205,6 +218,20 @@ class HierarchicalSynthesizer:
         if part is None:
             return False
         pods = {part[m] for m in group}
+        return -1 not in pods and len(pods) > 1
+
+    def spans_conditions(self, conds) -> bool:
+        """Condition-level :meth:`spans_pods`: True iff every endpoint of
+        every condition is pod-assigned and the set crosses a pod boundary —
+        the eligibility test for :meth:`spanning` (and for the recursion
+        into a partitioned pod sub-topology)."""
+        part = self.topology.partition
+        if part is None or not conds:
+            return False
+        pods: set[int] = set()
+        for c in conds:
+            pods.add(part[c.src])
+            pods.update(self._dest_pod_buckets(c))
         return -1 not in pods and len(pods) > 1
 
     def _require(self, group) -> list[int]:
@@ -318,6 +345,23 @@ class HierarchicalSynthesizer:
                 return False
         return True
 
+    def _dest_pod_buckets(self, c: Condition) -> dict[int, list[int]]:
+        """``{pod: [dests in pod]}`` for one condition's destination set,
+        memoized by the frozenset's identity (guarded against id reuse).
+        Bounded: a long-lived synthesizer fed fresh condition objects every
+        call (per-step re-planning) must not accumulate dead dest sets."""
+        if len(self._dest_buckets) > (1 << 16):
+            self._dest_buckets.clear()
+        got = self._dest_buckets.get(id(c.dests))
+        if got is None or got[0] is not c.dests:
+            part = self.topology.partition
+            buckets: dict[int, list[int]] = {}
+            for d in c.dests:
+                buckets.setdefault(part[d], []).append(d)
+            got = (c.dests, buckets)
+            self._dest_buckets[id(c.dests)] = got
+        return got[1]
+
     # -- phase synthesis helpers -------------------------------------------
 
     def _synthesize_local(
@@ -326,7 +370,10 @@ class HierarchicalSynthesizer:
     ) -> CollectiveAlgorithm:
         """Synthesize a phase on its (sub-)topology, through the registry
         when one is attached so isomorphic pods (equal sub-topology
-        fingerprints + equal condition signatures) share one plan.
+        fingerprints + equal condition signatures) share one plan. The
+        registry key carries the sub-topology's partition fingerprint: a
+        flat plan synthesized for an unpartitioned view of the same fabric
+        must never be served for a partitioned (recursive) view.
 
         ``replicate`` turns on the engine's path-replication fast path —
         used in the sequential (scale) regime, where phase traffic is bulk
@@ -336,19 +383,186 @@ class HierarchicalSynthesizer:
         if not conds:
             return CollectiveAlgorithm(sub, [], [], name=kind)
         if self.registry is None or not cacheable:
-            return self.engine.synthesize(conds, name=kind, topology=sub,
-                                          replicate=replicate)
+            return self._phase_algorithm(sub, conds, kind, replicate)
 
         def synth(_group):
-            return self.engine.synthesize(conds, name=kind, topology=sub,
-                                          replicate=replicate)
+            return self._phase_algorithm(sub, conds, kind, replicate)
 
         return self.registry.get_or_synthesize(
             sub, f"hier:{kind}", range(len(sub.npus)), synth,
-            params=(_signature(conds), replicate),
+            params=(sub.partition_fingerprint(), _signature(conds),
+                    replicate),
         )
 
+    def _phase_algorithm(
+        self, sub: Topology, conds: list[Condition], kind: str,
+        replicate: bool,
+    ) -> CollectiveAlgorithm:
+        """One phase's schedule: recursively through a nested
+        :class:`HierarchicalSynthesizer` when the sub-topology itself
+        carries a partition the conditions span (pods-of-pods — the intra
+        and scatter phases of a rack -> pod -> plane fabric decompose into
+        per-rack plans, a pod boundary phase, and rack scatters), else flat
+        engine synthesis. A nested :class:`HierarchyError` (missing
+        gateways, unreachable sub-pods, degenerate sub-partition) falls
+        back to flat synthesis of the phase — never a wrong plan."""
+        if sub.partition is not None:
+            nested = self._nested_for(sub)
+            if nested.spans_conditions(conds):
+                try:
+                    return nested.spanning(conds, name=kind)
+                except HierarchyError:
+                    pass
+        return self.engine.synthesize(conds, name=kind, topology=sub,
+                                      replicate=replicate)
+
+    def _nested_for(self, sub: Topology) -> "HierarchicalSynthesizer":
+        """The nested synthesizer over one partitioned pod sub-topology.
+        Shares this synthesizer's registry, so per-rack plans are cached
+        across isomorphic racks of every pod at every level."""
+        ent = self._nested.get(id(sub))
+        if ent is None or ent[0] is not sub:
+            eng = SynthesisEngine(sub, registry=self.registry)
+            ent = (sub, HierarchicalSynthesizer(eng))
+            self._nested[id(sub)] = ent
+        return ent[1]
+
     # -- collectives --------------------------------------------------------
+
+    def spanning(
+        self, conds: list[Condition], *, pipeline: str | bool = "auto",
+        name: str = "pccl_hier_spanning",
+    ) -> CollectiveAlgorithm:
+        """Hierarchically synthesize an *arbitrary* pod-spanning condition
+        set: the generic decomposition the named collectives build on, and
+        the re-entry point of the pods-of-pods recursion (a partitioned pod
+        sub-topology's phase conditions come back through here).
+
+        Per condition: destinations in the source's pod (plus the chunk's
+        egress gateway) resolve in that pod's intra phase; the inter phase
+        multicasts the chunk from its egress gateway to one ingress gateway
+        per remote destination pod over the boundary fabric; per-pod
+        scatter phases deliver arrived chunks to their in-pod destinations.
+        Egress gateways round-robin per source pod and ingress gateways
+        round-robin over the reachable candidates, so the per-gateway load
+        histograms are pod-position-independent and isomorphic pods keep
+        sharing one registry-cached plan per phase kind."""
+        part = self.topology.partition
+        if part is None:
+            raise HierarchyError(f"{self.topology.name}: no partition set")
+        pods: set[int] = set()
+        chunks: set[int] = set()
+        dest_objs: dict[int, frozenset] = {}
+        for c in conds:
+            pods.add(part[c.src])
+            pods.update(self._dest_pod_buckets(c))
+            dest_objs.setdefault(id(c.dests), c.dests)
+            if c.chunk in chunks:
+                raise HierarchyError(
+                    f"duplicate chunk id {c.chunk} in spanning conditions")
+            chunks.add(c.chunk)
+        if -1 in pods:
+            raise HierarchyError(
+                "condition endpoints include devices owned by no pod")
+        involved = sorted(pods)
+        if len(involved) < 2:
+            raise HierarchyError("conditions do not span pods")
+        for p in involved:
+            if not self.topology.gateways(p):
+                raise HierarchyError(f"pod {p} has no gateway NPUs")
+
+        # per-chunk routing: egress gateway (round-robin by the chunk's
+        # ordinal within its source pod), ingress gateway per destination
+        # pod (round-robin over the reachable candidates)
+        seen: dict[int, int] = {}
+        egress: dict[int, int] = {}
+        ingress: dict[tuple[int, int], int] = {}
+        dest_pods: dict[int, list[int]] = {}
+        by_src_pod: dict[int, list[Condition]] = {p: [] for p in involved}
+        by_dst_pod: dict[int, list[Condition]] = {p: [] for p in involved}
+        for c in conds:
+            p = part[c.src]
+            by_src_pod[p].append(c)
+            k = seen.get(p, 0)
+            seen[p] = k + 1
+            qs = sorted(q for q in self._dest_pod_buckets(c) if q != p)
+            dest_pods[c.chunk] = qs
+            if not qs:
+                continue  # same-pod condition: intra phase handles it fully
+            gws = self._pod(p).gateways
+            egress[c.chunk] = gws[k % len(gws)]
+            for q in qs:
+                cand = self._reachable_gateways(egress[c.chunk], q)
+                ingress[(c.chunk, q)] = cand[k % len(cand)][2]
+                by_dst_pod[q].append(c)
+
+        def intra_conds(p, ctx):
+            out = []
+            to_local = ctx.view.to_local
+            for c in by_src_pod[p]:
+                dests = set(self._dest_pod_buckets(c).get(p, ()))
+                e = egress.get(c.chunk)
+                if e is not None:
+                    dests.add(e)
+                dests.discard(c.src)
+                if not dests:
+                    continue
+                dests.add(c.src)
+                out.append(Condition(
+                    c.chunk, to_local[c.src],
+                    frozenset(to_local[d] for d in dests),
+                    bytes=c.bytes, release=c.release, tag="hier_intra",
+                ))
+            return out
+
+        def inter_conds(bview):
+            out = []
+            to_local = bview.to_local
+            for c in conds:
+                e = egress.get(c.chunk)
+                if e is None:
+                    continue
+                dests = {ingress[(c.chunk, q)] for q in dest_pods[c.chunk]}
+                dests.discard(e)
+                if not dests:
+                    continue
+                # the release rides every phase: a chunk whose source IS its
+                # egress gateway may reach the inter phase with no intra
+                # barrier before it, so dropping the release here would
+                # schedule the boundary transfer before the chunk exists
+                out.append(Condition(
+                    c.chunk, to_local[e],
+                    frozenset(to_local[d] for d in dests),
+                    bytes=c.bytes, release=c.release, tag="hier_inter",
+                ))
+            return out
+
+        def scatter_conds(q, ctx):
+            out = []
+            to_local = ctx.view.to_local
+            for c in by_dst_pod[q]:
+                src = ingress[(c.chunk, q)]
+                dests = set(self._dest_pod_buckets(c).get(q, ()))
+                dests.discard(src)
+                if not dests:
+                    continue
+                dests.add(src)
+                out.append(Condition(
+                    c.chunk, to_local[src],
+                    frozenset(to_local[d] for d in dests),
+                    bytes=c.bytes, release=c.release, tag="hier_scatter",
+                ))
+            return out
+
+        endpoints = {c.src for c in conds}
+        for dests in dest_objs.values():
+            endpoints |= dests
+        return self._compose(
+            name, conds, involved, intra_conds, inter_conds, scatter_conds,
+            pipeline=pipeline, group_size=len(endpoints),
+            arrival_node=egress,
+            ingress_of=lambda g, q: ingress.get((g, q)),
+        )
 
     def all_gather(
         self, group, *, bytes: float = 1.0, chunks_per_npu: int = 1,
@@ -358,90 +572,14 @@ class HierarchicalSynthesizer:
         the chunk's egress gateway), gateway exchange across the boundary
         fabric (one multicast condition per chunk, fanning out to one
         ingress gateway per remote pod), then per-pod scatter of the arrived
-        remote chunks."""
+        remote chunks — the :meth:`spanning` decomposition of the all-gather
+        condition set."""
         group = list(group)
-        involved = self._require(group)
+        self._require(group)
         conds = cnd.all_gather(group, ids=ids or ChunkIds(), bytes=bytes,
                                chunks_per_npu=chunks_per_npu)
-        part = self.topology.partition
-        members = {p: [m for m in group if part[m] == p] for p in involved}
-
-        # chunk ordinal within its pod drives balanced gateway round-robin
-        ord_in_pod: dict[int, int] = {}
-        seen: dict[int, int] = {}
-        egress: dict[int, int] = {}
-        for c in conds:
-            p = part[c.src]
-            k = seen.get(p, 0)
-            seen[p] = k + 1
-            ord_in_pod[c.chunk] = k
-            gws = self._pod(p).gateways
-            egress[c.chunk] = gws[k % len(gws)]
-
-        # ingress gateway per (chunk, remote pod), balanced over the
-        # reachable candidates
-        ingress: dict[tuple[int, int], int] = {}
-        for c in conds:
-            p = part[c.src]
-            for q in involved:
-                if q == p:
-                    continue
-                cand = self._reachable_gateways(egress[c.chunk], q)
-                ingress[(c.chunk, q)] = cand[ord_in_pod[c.chunk] % len(cand)][2]
-
-        def intra_conds(p, ctx):
-            out = []
-            for c in conds:
-                if part[c.src] != p:
-                    continue
-                dests = set(members[p]) | {egress[c.chunk]}
-                dests.discard(c.src)
-                if not dests:
-                    continue
-                out.append(Condition(
-                    c.chunk, ctx.view.to_local[c.src],
-                    _dests_local(ctx.view, dests | {c.src}),
-                    bytes=bytes, tag="hier_intra",
-                ))
-            return out
-
-        def inter_conds(bview):
-            out = []
-            for c in conds:
-                p = part[c.src]
-                dests = {ingress[(c.chunk, q)] for q in involved if q != p}
-                dests.discard(egress[c.chunk])
-                if not dests:
-                    continue
-                out.append(Condition(
-                    c.chunk, bview.to_local[egress[c.chunk]],
-                    _dests_local(bview, dests), bytes=bytes,
-                    tag="hier_inter",
-                ))
-            return out
-
-        def scatter_conds(q, ctx):
-            out = []
-            for c in conds:
-                if part[c.src] == q:
-                    continue
-                src = ingress[(c.chunk, q)]
-                dests = set(members[q]) - {src}
-                if not dests:
-                    continue
-                out.append(Condition(
-                    c.chunk, ctx.view.to_local[src],
-                    _dests_local(ctx.view, dests | {src}),
-                    bytes=bytes, tag="hier_scatter",
-                ))
-            return out
-
-        return self._compose(
-            "pccl_hier_all_gather", conds, involved, intra_conds,
-            inter_conds, scatter_conds, pipeline=pipeline,
-            group_size=len(group), arrival_node=egress,
-            ingress_of=lambda g, q: ingress[(g, q)],
-        )
+        return self.spanning(conds, pipeline=pipeline,
+                             name="pccl_hier_all_gather")
 
     def all_to_all(
         self, group, *, bytes: float = 1.0, chunks_per_pair: int = 1,
@@ -746,7 +884,10 @@ class HierarchicalSynthesizer:
                 g = b_chunk_map[c.chunk]
                 node = arrival_node.get(g)
                 rel = arr.get((g, node), 0.0) if node is not None else 0.0
-                rel_conds.append(replace(c, release=rel) if rel else c)
+                # arrival only ever *raises* the floor — the condition may
+                # carry its own (caller-imposed) release already
+                rel_conds.append(
+                    replace(c, release=rel) if rel > c.release else c)
             inter_alg = self._synthesize_local(
                 bview.topology, rel_conds, kind="inter", cacheable=False,
             )
@@ -789,7 +930,7 @@ class HierarchicalSynthesizer:
                             0.0,
                         )
                     rel_conds.append(
-                        replace(c, release=rel) if rel else c
+                        replace(c, release=rel) if rel > c.release else c
                     )
                 phases.append(PhaseSpec(
                     f"scatter:{q}", conds=rel_conds,

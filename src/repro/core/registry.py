@@ -42,8 +42,11 @@ _MAX_AUTOMORPHISMS = 4096
 # Cache-key schema version, part of every fingerprint (memory and disk).
 # Bump whenever the synthesis core changes in a way that could alter emitted
 # schedules, so plans cached by an older core are never served by a newer
-# one. v2: array-backed TEN + batched-frontier BFS core.
-SCHEMA_VERSION = 2
+# one. v2: array-backed TEN + batched-frontier BFS core. v3: recursive
+# multi-level hierarchy — hierarchical route/phase params now carry the
+# partition-tree fingerprint, and pod phases on nested-partitioned
+# sub-topologies synthesize recursively.
+SCHEMA_VERSION = 3
 
 
 # ---------------------------------------------------------------------------

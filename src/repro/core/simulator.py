@@ -113,7 +113,10 @@ def phase_breakdown(alg: CollectiveAlgorithm) -> dict[str, dict[str, float]]:
     """Per-phase timing of a composed (hierarchical / PhasePlan) algorithm:
     ``{phase: {"start", "end", "span"}}`` from the algorithm's recorded
     ``phase_spans`` — e.g. how much of a hierarchical All-to-All's makespan
-    the inter-pod phase accounts for. Empty for single-phase algorithms."""
+    the inter-pod phase accounts for. Multi-level compositions contribute
+    nested ``"parent/child"`` keys whose windows lie inside the parent's
+    (filter with ``alg.top_phase_spans()`` for the top level only). Empty
+    for single-phase algorithms."""
     return {
         name: {"start": lo, "end": hi, "span": hi - lo}
         for name, lo, hi in getattr(alg, "phase_spans", [])

@@ -246,6 +246,13 @@ class MeshCollectivePlanner:
     so the data-parallel gradient path, the dominant collective of
     multi-pod training, takes the scalable route by default. Pass
     ``hierarchy="never"`` to force flat synthesis.
+
+    Fabrics carrying a nested partition tree (``three_level`` et al —
+    rack -> pod -> plane) recurse: a plane-spanning group decomposes into a
+    plane phase over pod gateways, per-pod phases that themselves decompose
+    into rack phases, and canonical per-rack plans registry-shared across
+    every isomorphic rack of every pod. ``hierarchy_levels()`` reports how
+    deep the routing goes.
     """
 
     def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None):
@@ -278,6 +285,12 @@ class MeshCollectivePlanner:
         if self.topo.partition is None:
             return False
         return self.engine.hierarchical().spans_pods(self.axis_groups(axis)[0])
+
+    def hierarchy_levels(self) -> int:
+        """Routing depth of the fabric: 1 = flat, 2 = pods, 3 = pods-of-pods
+        (rack -> pod -> plane), i.e. ``partition_depth + 1``. Pod-spanning
+        groups synthesize through that many phase levels."""
+        return self.topo.partition_depth + 1
 
     def algorithm(self, kind: str, axis: str, group_index: int = 0, *,
                   nbytes: float = 1.0, **kw):

@@ -10,6 +10,7 @@ from repro.topology.generators import (
     two_level_switch,
     tpu_v5e_pod,
     multi_pod,
+    three_level,
 )
 
 __all__ = [
@@ -28,4 +29,5 @@ __all__ = [
     "two_level_switch",
     "tpu_v5e_pod",
     "multi_pod",
+    "three_level",
 ]

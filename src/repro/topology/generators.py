@@ -235,3 +235,101 @@ def multi_pod(
         [n // per_pod for n in range(num_pods * per_pod)] + [-1]
     )
     return topo
+
+
+def three_level(
+    num_pods: int = 2,
+    racks_per_pod: int = 2,
+    npus_per_rack: int = 4,
+    rack_gbps: float = 400.0,
+    agg_gbps: float = 100.0,
+    dci_gbps: float = 25.0,
+    dci_alpha: float = 10.0,
+    dci_ports_per_pod: int | None = None,
+    unit_links: bool = False,
+) -> Topology:
+    """Three-level datacenter fabric: racks of NPUs, pods of racks, and a
+    DCI plane of pods — the pods-of-pods regime where flat TEN search is
+    hopeless and even one partition level leaves per-pod sub-problems too
+    large.
+
+    Structure (NPU ids dense first: pod p, rack r, slot i at
+    ``(p*R + r)*K + i``):
+
+    * **rack**: ``npus_per_rack`` NPUs on a bidirectional ring (scale-up
+      fabric); NPU 0 is the rack gateway.
+    * **pod**: ``racks_per_pod`` racks; each rack gateway uplinks to the
+      pod's aggregation switch (scale-out fabric).
+    * **plane**: the first ``dci_ports_per_pod`` rack gateways of every pod
+      uplink to a shared DCI switch (default: every rack gateway).
+
+    The nested partition is derived automatically: NPU (p, r, i) carries
+    path ``(p, r)``, the pod aggregation switches ``(p, -1)`` (inside their
+    pod, shared across its racks), and the DCI switch ``-1`` — so
+    ``pod_subtopology(p)`` is itself partitioned into racks and
+    hierarchical synthesis recurses rack -> pod -> plane.
+
+    ``unit_links=True`` collapses every link to (alpha=0, beta=1) — the
+    homogeneous unit-time regime driving the integer-TEN fast paths; used
+    by the scale benchmarks.
+    """
+    if npus_per_rack < 1 or racks_per_pod < 1 or num_pods < 1:
+        raise ValueError("three_level sizes must be >= 1")
+    if dci_ports_per_pod is not None and dci_ports_per_pod < 1:
+        raise ValueError(
+            "dci_ports_per_pod must be >= 1 (0 would disconnect the pods)")
+    ports = racks_per_pod if dci_ports_per_pod is None else min(
+        dci_ports_per_pod, racks_per_pod)
+    beta_rack = (1.0 / (rack_gbps * 1e9)) * (1 << 20) * 1e6
+    beta_agg = (1.0 / (agg_gbps * 1e9)) * (1 << 20) * 1e6
+    beta_dci = (1.0 / (dci_gbps * 1e9)) * (1 << 20) * 1e6
+    alpha_rack, alpha_agg, alpha_dci = 0.5, 1.0, dci_alpha
+    if unit_links:
+        alpha_rack = alpha_agg = alpha_dci = 0.0
+        beta_rack = beta_agg = beta_dci = 1.0
+    suffix = "_unit" if unit_links else ""
+    topo = Topology(
+        f"three_level_{num_pods}x{racks_per_pod}x{npus_per_rack}{suffix}")
+    per_rack, per_pod = npus_per_rack, racks_per_pod * npus_per_rack
+    topo.add_npus(num_pods * per_pod)
+    nid = lambda p, r, i: (p * racks_per_pod + r) * per_rack + i
+    for p in range(num_pods):
+        for r in range(racks_per_pod):
+            if per_rack == 2:
+                topo.add_bidir_link(nid(p, r, 0), nid(p, r, 1),
+                                    alpha_rack, beta_rack)
+            elif per_rack > 2:
+                for i in range(per_rack):
+                    topo.add_bidir_link(nid(p, r, i),
+                                        nid(p, r, (i + 1) % per_rack),
+                                        alpha_rack, beta_rack)
+    agg = [topo.add_node(NodeType.SWITCH) for _ in range(num_pods)]
+    for p in range(num_pods):
+        for r in range(racks_per_pod):
+            topo.add_bidir_link(nid(p, r, 0), agg[p], alpha_agg, beta_agg)
+    dci = topo.add_node(NodeType.SWITCH)
+    for p in range(num_pods):
+        for r in range(ports):
+            topo.add_bidir_link(nid(p, r, 0), dci, alpha_dci, beta_dci)
+    paths: list = [
+        (n // per_pod, (n % per_pod) // per_rack)
+        for n in range(num_pods * per_pod)
+    ]
+    paths += [(p, -1) for p in range(num_pods)] + [-1]
+    topo.set_partition(paths)
+    # pod rotation is always a symmetry; rack rotation within every pod is
+    # one exactly when every rack uplinks to the DCI (the registry verifies
+    # each generator before use, so this only ever *adds* cache sharing)
+    n_npus = num_pods * per_pod
+    pod_rot = tuple(
+        (n + per_pod) % n_npus for n in range(n_npus)
+    ) + tuple(n_npus + (p + 1) % num_pods
+              for p in range(num_pods)) + (dci,)
+    topo.automorphism_generators = [pod_rot]
+    if ports == racks_per_pod:
+        rack_rot = tuple(
+            (n // per_pod) * per_pod + (n % per_pod + per_rack) % per_pod
+            for n in range(n_npus)
+        ) + tuple(agg) + (dci,)
+        topo.automorphism_generators.append(rack_rot)
+    return topo

@@ -13,13 +13,24 @@ sub-topologies, the boundary link set, the boundary sub-topology the
 inter-pod synthesis phase runs on, and a quotient "pod graph" whose nodes
 are pods. The hierarchical synthesis pipeline (:mod:`repro.core.hierarchy`)
 consumes these views; generators that know their pod structure
-(``multi_pod``, ``two_level_switch``, ``grid_hypercube``) set the partition
-automatically, and custom fabrics can call ``set_partition`` directly.
+(``multi_pod``, ``two_level_switch``, ``grid_hypercube``, ``three_level``)
+set the partition automatically, and custom fabrics can call
+``set_partition`` directly.
+
+Partitions form a *tree*, not just one level: ``set_partition`` accepts
+nested specs — each entry is either a pod id or a path ``(pod, sub_pod,
+...)`` naming the device's pod at every level (rack -> pod -> plane
+fabrics). ``pod_subtopology`` then returns a sub-topology that itself
+carries the next level's partition (the path tails), so hierarchical
+synthesis recurses: each intra-pod phase re-enters the pod-aware pipeline
+on the pod's own partitioned fabric, with parent-id lifting composed
+across levels through the stacked :class:`TopologyView` maps.
 """
 
 from __future__ import annotations
 
 import enum
+import hashlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -143,6 +154,9 @@ class Topology:
         # Partition metadata: node id -> pod id (-1 = shared/unassigned,
         # e.g. an inter-pod switch). None until set_partition is called.
         self._pod_of: tuple[int, ...] | None = None
+        # Full partition-tree paths: node id -> (pod, sub_pod, ...). Kept
+        # alongside the top-level view; tails seed nested sub-partitions.
+        self._pod_paths: tuple[tuple[int, ...], ...] | None = None
 
     # -- construction ------------------------------------------------------
     def _invalidate_caches(self) -> None:
@@ -157,7 +171,7 @@ class Topology:
         for attr in ("_structure_hash", "_automorphism_closure",
                      "_pccl_engines", "_csr_cache", "_rev_dist_rows",
                      "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache",
-                     "_pod_views", "_rev_cache"):
+                     "_pod_views", "_rev_cache", "_partition_fp"):
             if hasattr(self, attr):
                 delattr(self, attr)
 
@@ -174,6 +188,7 @@ class Topology:
         self._in.append([])
         if self._pod_of is not None:  # nodes added later start unassigned
             self._pod_of = self._pod_of + (-1,)
+            self._pod_paths = self._pod_paths + ((-1,),)
         return nid
 
     def add_npus(self, n: int) -> list[int]:
@@ -230,32 +245,98 @@ class Topology:
         return all(l.alpha == a0 and l.beta == b0 for l in self.links)
 
     # -- partition metadata (multi-pod fabrics) ----------------------------
-    def set_partition(self, pod_of) -> None:
-        """Declare pod membership: ``pod_of[node] = pod id`` with pods dense
-        ``0..P-1``; ``-1`` marks shared devices owned by no pod (e.g. an
-        inter-pod DCI switch). Generators with known structure call this;
-        custom fabrics may too. Derived views (:meth:`pod_subtopology`,
-        :meth:`boundary_subtopology`, :meth:`pod_graph`) are recomputed
-        lazily after every call."""
-        pod_of = tuple(int(p) for p in pod_of)
-        if len(pod_of) != self.num_nodes:
+    @staticmethod
+    def _validate_paths(paths: list[tuple[int, ...]], where: str) -> None:
+        """Recursive partition-tree validation: at every level the pod ids in
+        use are dense ``0..P-1`` (``-1`` = shared, and terminates its path),
+        and each pod's tails form a valid partition of the next level."""
+        heads = [p[0] for p in paths]
+        if any(h < -1 for h in heads):
+            raise ValueError(f"pod ids must be >= -1 ({where})")
+        used = sorted({h for h in heads if h >= 0})
+        if used != list(range(len(used))):
             raise ValueError(
-                f"partition names {len(pod_of)} nodes, fabric has "
+                f"pod ids must be dense 0..P-1, got {used} ({where})")
+        for p in paths:
+            if p[0] == -1 and len(p) > 1:
+                raise ValueError(
+                    f"shared (-1) must terminate its partition path, got "
+                    f"{p} ({where})")
+        for pod in used:
+            tails = [p[1:] for p in paths if p[0] == pod and len(p) > 1]
+            if tails:
+                Topology._validate_paths(tails, f"{where}/pod{pod}")
+
+    def set_partition(self, pod_of) -> None:
+        """Declare pod membership: ``pod_of[node]`` is either a pod id with
+        pods dense ``0..P-1`` (``-1`` marks shared devices owned by no pod,
+        e.g. an inter-pod DCI switch), or a nested *path* ``(pod, sub_pod,
+        ...)`` assigning the device at every level of a partition tree
+        (``(p, -1)`` = in pod ``p`` but shared at the next level). Generators
+        with known structure call this; custom fabrics may too. Derived views
+        (:meth:`pod_subtopology`, :meth:`boundary_subtopology`,
+        :meth:`pod_graph`) are recomputed lazily after every call;
+        ``pod_subtopology`` of a pod with a sub-partition returns a topology
+        carrying that sub-partition, which is how hierarchical synthesis
+        recurses through rack -> pod -> plane fabrics."""
+        paths = []
+        for p in pod_of:
+            if isinstance(p, (int, np.integer)):
+                paths.append((int(p),))
+            else:
+                path = tuple(int(x) for x in p)
+                if not path:
+                    raise ValueError("empty partition path")
+                paths.append(path)
+        if len(paths) != self.num_nodes:
+            raise ValueError(
+                f"partition names {len(paths)} nodes, fabric has "
                 f"{self.num_nodes}"
             )
-        used = sorted({p for p in pod_of if p >= 0})
-        if any(p < -1 for p in pod_of):
-            raise ValueError("pod ids must be >= -1")
-        if used != list(range(len(used))):
-            raise ValueError(f"pod ids must be dense 0..P-1, got {used}")
-        self._pod_of = pod_of
-        if hasattr(self, "_pod_views"):
-            delattr(self, "_pod_views")
+        self._validate_paths(paths, self.name)
+        self._pod_paths = tuple(paths)
+        self._pod_of = tuple(p[0] for p in paths)
+        for attr in ("_pod_views", "_partition_fp"):
+            if hasattr(self, attr):
+                delattr(self, attr)
 
     @property
     def partition(self) -> tuple[int, ...] | None:
-        """``pod_of`` tuple, or None for unpartitioned fabrics."""
+        """Top-level ``pod_of`` tuple, or None for unpartitioned fabrics."""
         return self._pod_of
+
+    @property
+    def partition_paths(self) -> tuple[tuple[int, ...], ...] | None:
+        """Full per-node partition-tree paths (None = unpartitioned)."""
+        return self._pod_paths
+
+    @property
+    def partition_depth(self) -> int:
+        """Number of partition levels: 0 = unpartitioned, 1 = flat pods,
+        2 = pods-of-pods (three routing levels), counting only assigned
+        (``>= 0``) path entries."""
+        if self._pod_paths is None:
+            return 0
+        return max(
+            (sum(1 for x in p if x >= 0) for p in self._pod_paths),
+            default=0,
+        )
+
+    def partition_fingerprint(self) -> str | None:
+        """Stable hash of the full partition tree (None = unpartitioned).
+
+        Registry keys for hierarchical routes must include this: the
+        topology *structure* hash is partition-blind, so a 2-level and a
+        3-level view of the same fabric would otherwise collide and a
+        cached 2-level plan could be served for the 3-level view."""
+        if self._pod_paths is None:
+            return None
+        got = getattr(self, "_partition_fp", None)
+        if got is None:
+            got = hashlib.sha256(
+                repr(self._pod_paths).encode()).hexdigest()[:16]
+            self._partition_fp = got
+        return got
 
     @property
     def num_pods(self) -> int:
@@ -322,7 +403,15 @@ class Topology:
         """Pod ``pod``'s internal fabric: its nodes plus the links with both
         endpoints inside it. Isomorphic pods extract to identical local
         topologies (same registry fingerprint), which is what lets one
-        synthesized pod plan serve every pod."""
+        synthesized pod plan serve every pod.
+
+        On a nested partition tree the extracted topology carries the next
+        level's partition (the members' path tails), so hierarchical
+        synthesis re-enters the pod-aware pipeline on it — the recursion
+        step of rack -> pod -> plane decomposition. Two isomorphic pods with
+        equal sub-partitions extract to identical sub-topologies *and*
+        identical partition fingerprints, preserving registry sharing at
+        every level."""
         views = self._views()
         got = views.get(("sub", pod))
         if got is None:
@@ -331,6 +420,11 @@ class Topology:
                      if l.src in members and l.dst in members]
             got = self._extract(members, links,
                                 f"{self.name}_pod{pod}")
+            if self._pod_paths is not None:
+                tails = [self._pod_paths[g][1:] or (-1,)
+                         for g in got.nodes]
+                if any(t[0] >= 0 for t in tails):
+                    got.topology.set_partition(tails)
             views[("sub", pod)] = got
         return got
 
@@ -587,9 +681,12 @@ class Topology:
         for link in self.links:
             rev.add_link(link.dst, link.src, link.alpha, link.beta)
         # node symmetries are direction-agnostic, as is pod membership
+        # (the full partition-tree paths carry over, so nested reversed
+        # pod views decompose identically)
         rev.automorphism_generators = list(self.automorphism_generators)
         if self._pod_of is not None:
             rev._pod_of = self._pod_of
+            rev._pod_paths = self._pod_paths
         cached = getattr(self, "_hop_matrix_cache", None)
         if cached is not None and cached[0] is not False:
             rev._hop_matrix_cache = (cached[0].T,)

@@ -281,8 +281,12 @@ class TestHierarchicalReductions:
         alg = eng.all_reduce(fabric.npus)
         assert alg.name == "pccl_hier_all_reduce"
         alg.validate(mode="oracle")
-        assert [n for n, _, _ in alg.phase_spans] == \
+        assert [n for n, _, _ in alg.top_phase_spans()] == \
             ["reduce_scatter", "all_gather"]
+        # sub-phase provenance rides along as nested "parent/child" spans
+        nested = [n for n, _, _ in alg.phase_spans if "/" in n]
+        assert any(n.startswith("reduce_scatter/") for n in nested)
+        assert any(n.startswith("all_gather/") for n in nested)
         bd = phase_breakdown(alg)
         assert bd["all_gather"]["start"] >= bd["reduce_scatter"]["end"]
 

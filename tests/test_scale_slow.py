@@ -1,19 +1,27 @@
 """Scale smoke tests (slow tier): the array-backed core must hold the
 paper's Fig. 11 trajectory — a 144-NPU mesh All-to-All synthesizes and
-validates inside a hard wall-clock budget. Run with ``pytest -m slow``
-(a non-blocking CI job does); the quick tier skips these.
+validates inside a hard wall-clock budget — and the multi-level
+hierarchical pipeline must keep a cold three-level 2048-NPU All-Gather
+inside its budget with registry misses bounded independent of fabric
+size. Run with ``pytest -m slow`` (a non-blocking CI job does); the quick
+tier skips these.
 """
 
 import time
 
 import pytest
 
+from repro.core import AlgorithmRegistry
 from repro.core.engine import SynthesisEngine
-from repro.topology import mesh2d
+from repro.topology import mesh2d, three_level
 
 # generous for CI-class machines: the reference loop needs ~15-20s for the
 # synthesis alone on a dev box, the event-frontier core ~3-4s
 _BUDGET_SECONDS = 120.0
+
+# cold 2048-NPU three-level All-Gather: ~12s synthesis + ~4s bulk
+# validation on a dev box; generous headroom for CI-class machines
+_HIER3_BUDGET_SECONDS = 300.0
 
 
 @pytest.mark.slow
@@ -30,4 +38,33 @@ def test_mesh12x12_all_to_all_within_budget():
     assert wall_s < _BUDGET_SECONDS, (
         f"12x12 All-to-All took {wall_s:.1f}s (synthesis {synth_s:.1f}s), "
         f"budget {_BUDGET_SECONDS}s — the scaling regression gate failed"
+    )
+
+
+@pytest.mark.slow
+def test_three_level_2048_all_gather_within_budget():
+    """Cold multi-level (rack -> pod -> plane) 2048-NPU All-Gather: the
+    recursion must synthesize + bulk-validate inside the budget, taking
+    the truly hierarchical route, with registry misses bounded by
+    (phase kinds x levels) + the named route — independent of fabric
+    size (16 pods x 16 racks pay for ~one of each phase kind per level)."""
+    topo = three_level(16, 16, 8, unit_links=True)
+    n = 2048
+    reg = AlgorithmRegistry()
+    t0 = time.perf_counter()
+    alg = SynthesisEngine(topo, registry=reg).all_gather(topo.npus)
+    synth_s = time.perf_counter() - t0
+    alg.validate(mode="bulk")
+    wall_s = time.perf_counter() - t0
+    assert alg.name == "pccl_hier_all_gather"
+    assert len(alg.conditions) == n
+    assert any("/" in name for name, _, _ in alg.phase_spans), (
+        "2048-NPU plan must carry nested (recursive) phase provenance")
+    kinds, levels = 3, 3  # intra/inter/scatter x rack/pod/plane
+    assert reg.stats.misses <= kinds * levels + 1, (
+        f"registry misses {reg.stats.misses} exceed the (kinds x levels) "
+        f"bound — per-rack/per-pod plan sharing has regressed")
+    assert wall_s < _HIER3_BUDGET_SECONDS, (
+        f"three-level 2048-NPU All-Gather took {wall_s:.1f}s (synthesis "
+        f"{synth_s:.1f}s), budget {_HIER3_BUDGET_SECONDS}s"
     )

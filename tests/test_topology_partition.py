@@ -1,11 +1,12 @@
-"""Tests for Topology partition metadata (pods, boundary views, pod graph)
-and the cache-carrying ``reversed()`` view."""
+"""Tests for Topology partition metadata (pods, boundary views, pod graph,
+nested partition trees) and the cache-carrying ``reversed()`` view."""
 
 import numpy as np
 import pytest
 
 from repro.core.registry import topology_fingerprint
-from repro.topology import NodeType, Topology, multi_pod, two_level_switch
+from repro.topology import (NodeType, Topology, multi_pod, three_level,
+                            two_level_switch)
 from repro.topology.generators import grid_hypercube
 
 
@@ -81,6 +82,95 @@ class TestPartition:
         before = len(topo.boundary_links())
         topo.add_link(0, topo.num_nodes - 1, 1.0, 1.0)
         assert len(topo.boundary_links()) == before + 1
+
+
+class TestNestedPartition:
+    """The recursive partition tree: nested set_partition specs, sub-view
+    partition carriage, composed lifting, and the tree fingerprint."""
+
+    def test_three_level_auto_partition(self):
+        topo = three_level(2, 3, 4, unit_links=True)
+        assert topo.num_pods == 2
+        assert topo.partition_depth == 2
+        # NPU paths are (pod, rack); agg switches (p, -1); DCI (-1,)
+        assert topo.partition_paths[0] == (0, 0)
+        assert topo.partition_paths[4] == (0, 1)
+        assert topo.partition_paths[24] == (0, -1)
+        assert topo.partition_paths[-1] == (-1,)
+        # top-level view unchanged by nesting
+        assert topo.partition[:12] == (0,) * 12
+        assert topo.gateways(0) == [0, 4, 8]  # rack gateways uplink to DCI
+
+    def test_pod_subtopology_carries_next_level(self):
+        topo = three_level(2, 3, 4, unit_links=True)
+        sub = topo.pod_subtopology(1).topology
+        assert sub.num_pods == 3  # racks
+        assert sub.partition_depth == 1
+        assert sub.partition[-1] == -1  # the pod aggregation switch
+        assert [len(p) for p in sub.pods()] == [4, 4, 4]
+        # rack gateways at the sub level are the agg-switch uplink NPUs
+        assert sub.gateways(0) == [0]
+
+    def test_lifting_composes_across_levels(self):
+        """Global id of a node reached through two stacked views equals the
+        composition of the two parent maps — what nested PhasePlan lifting
+        relies on."""
+        topo = three_level(2, 3, 4, unit_links=True)
+        mid = topo.pod_subtopology(1)
+        leaf = mid.topology.pod_subtopology(2)
+        for local, mid_id in enumerate(leaf.nodes):
+            global_id = mid.nodes[mid_id]
+            assert topo.partition_paths[global_id] == (1, 2)
+            # link timing survives both hops
+        for ll, mid_l in zip(leaf.topology.links, leaf.links):
+            g = topo.links[mid.links[mid_l]]
+            assert (ll.alpha, ll.beta) == (g.alpha, g.beta)
+
+    def test_nested_spec_validation(self):
+        topo = Topology("t")
+        topo.add_npus(4)
+        with pytest.raises(ValueError, match="dense"):
+            topo.set_partition([(0, 0), (0, 2), (1, 0), (1, 1)])
+        with pytest.raises(ValueError, match="terminate"):
+            topo.set_partition([(0, 0), (-1, 0), (1, 0), (1, 1)])
+        with pytest.raises(ValueError, match="empty"):
+            topo.set_partition([(), (0,), (0,), (1,)])
+        topo.set_partition([(0, 0), (0, 1), (1, 0), (1, 1)])
+        assert topo.partition == (0, 0, 1, 1)
+        assert topo.partition_depth == 2
+        # mixed int/path specs are legal: ints are depth-1 paths
+        topo.set_partition([0, (0, 0), 1, (1, 0)])
+        assert topo.partition_paths == ((0,), (0, 0), (1,), (1, 0))
+
+    def test_partition_fingerprint_tracks_tree(self):
+        a = three_level(2, 2, 3, unit_links=True)
+        b = three_level(2, 2, 3, unit_links=True)
+        assert a.partition_fingerprint() == b.partition_fingerprint()
+        b.set_partition([p[0] for p in b.partition_paths])  # flatten
+        assert a.partition_fingerprint() != b.partition_fingerprint()
+        assert topology_fingerprint(a) == topology_fingerprint(b)
+        assert Topology("x").partition_fingerprint() is None
+
+    def test_nodes_added_later_unassigned_in_tree(self):
+        topo = three_level(2, 2, 2, unit_links=True)
+        topo.add_node(NodeType.SWITCH)
+        assert topo.partition_paths[-1] == (-1,)
+        assert topo.partition[-1] == -1
+
+    def test_reversed_carries_partition_tree(self):
+        topo = three_level(2, 2, 3, unit_links=True)
+        rev = topo.reversed()
+        assert rev.partition_paths == topo.partition_paths
+        assert rev.partition_fingerprint() == topo.partition_fingerprint()
+        # reversed pod sub-views carry the same nested partition
+        assert (rev.pod_subtopology(0).topology.partition
+                == topo.pod_subtopology(0).topology.partition)
+
+    def test_isomorphic_pods_share_nested_fingerprints(self):
+        topo = three_level(3, 2, 3, unit_links=True)
+        subs = [topo.pod_subtopology(p).topology for p in range(3)]
+        assert len({topology_fingerprint(s) for s in subs}) == 1
+        assert len({s.partition_fingerprint() for s in subs}) == 1
 
 
 class TestReversedCaches:
