@@ -21,6 +21,8 @@ from repro.core.conditions import (
 )
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine
 from repro.core.hierarchy import HierarchicalSynthesizer, HierarchyError
+from repro.core.traffic import CommSketch, SketchInfeasibleError, \
+    TrafficEngineer
 from repro.core.registry import (
     AlgorithmRegistry,
     canonicalize_group,
@@ -70,6 +72,9 @@ __all__ = [
     "PhaseSpec",
     "HierarchicalSynthesizer",
     "HierarchyError",
+    "CommSketch",
+    "SketchInfeasibleError",
+    "TrafficEngineer",
     "AlgorithmRegistry",
     "canonicalize_group",
     "default_registry",

@@ -197,9 +197,15 @@ class SynthesisEngine:
     groups and across engines.
     """
 
-    def __init__(self, topology: Topology, *, registry=None):
+    def __init__(self, topology: Topology, *, registry=None,
+                 gateway_strategy: str = "auto", sketch=None):
         self.topology = topology
         self.registry = registry
+        # inter-pod gateway selection policy and operator constraints for
+        # the hierarchical route (see repro.core.hierarchy and
+        # repro.core.traffic); picked up by the lazy HierarchicalSynthesizer
+        self.gateway_strategy = gateway_strategy
+        self.sketch = sketch
         self._distances = _DistanceCache(topology)
         self._rev_topo: Topology | None = None
         self._hier = None  # lazy HierarchicalSynthesizer
@@ -706,7 +712,12 @@ class SynthesisEngine:
         served verbatim for a 3-level view of the same fabric (same
         structure, different ``set_partition``) — structurally valid but
         the wrong decomposition. Flat routes stay fingerprint-free: flat
-        synthesis never consults the partition."""
+        synthesis never consults the partition.
+
+        Hierarchical routes also key on the *resolved* gateway strategy and
+        the sketch fingerprint: a plan whose inter phase was routed
+        round-robin must never be served to a TE or sketch-constrained
+        request for the same group (and vice versa)."""
         if hierarchy == "always":
             if self.topology.partition is None:
                 from repro.core.hierarchy import HierarchyError
@@ -716,14 +727,27 @@ class SynthesisEngine:
                     f"fabric has no partition (set_partition was never "
                     f"called), so the hierarchical path cannot be taken"
                 )
-            return True, (True, True, self.topology.partition_fingerprint())
+            return True, (True, True, self.topology.partition_fingerprint(),
+                          *self._te_route_params())
         if hierarchy == "never" or self.topology.partition is None:
             return False, (False, False, None)
         if hierarchy != "auto":
             raise ValueError(f"hierarchy={hierarchy!r} not in auto/always/never")
         use = self.hierarchical().spans_pods(group)
-        return use, (use, False,
-                     self.topology.partition_fingerprint() if use else None)
+        if not use:
+            return False, (False, False, None)
+        return True, (True, False, self.topology.partition_fingerprint(),
+                      *self._te_route_params())
+
+    def _te_route_params(self) -> tuple:
+        """(resolved gateway strategy, sketch fingerprint) for the registry
+        route key. The strategy is resolved ("auto" -> "te" on
+        heterogeneous boundary fabrics) so the label is stable per fabric
+        and a later default change cannot silently re-serve stale plans."""
+        h = self.hierarchical()
+        sk = h.sketch
+        return (h._effective_strategy(),
+                sk.fingerprint() if sk is not None else None)
 
     # -- named collectives --------------------------------------------------
 
@@ -742,7 +766,9 @@ class SynthesisEngine:
                     return self.hierarchical().all_gather(
                         g, bytes=bytes, chunks_per_npu=chunks_per_npu)
                 except HierarchyError:
-                    if hierarchy == "always":
+                    # a sketch pins the hierarchical route: a silent flat
+                    # fallback would ignore its hard constraints
+                    if hierarchy == "always" or self.sketch is not None:
                         raise
             conds = cnd.all_gather(g, ids=ChunkIds(), bytes=bytes,
                                    chunks_per_npu=chunks_per_npu)
@@ -766,7 +792,9 @@ class SynthesisEngine:
                     return self.hierarchical().all_to_all(
                         g, bytes=bytes, chunks_per_pair=chunks_per_pair)
                 except HierarchyError:
-                    if hierarchy == "always":
+                    # a sketch pins the hierarchical route: a silent flat
+                    # fallback would ignore its hard constraints
+                    if hierarchy == "always" or self.sketch is not None:
                         raise
             conds = cnd.all_to_all(g, ids=ChunkIds(), bytes=bytes,
                                    chunks_per_pair=chunks_per_pair)
@@ -803,7 +831,9 @@ class SynthesisEngine:
                     return self.hierarchical().reduce_scatter(
                         g, bytes=bytes, chunks_per_npu=chunks_per_npu)
                 except HierarchyError:
-                    if hierarchy == "always":
+                    # a sketch pins the hierarchical route: a silent flat
+                    # fallback would ignore its hard constraints
+                    if hierarchy == "always" or self.sketch is not None:
                         raise
             return self._reduce_scatter_impl(g, bytes=bytes,
                                              chunks_per_npu=chunks_per_npu)
@@ -830,7 +860,9 @@ class SynthesisEngine:
                 try:
                     return self.hierarchical().all_reduce(g, bytes=bytes)
                 except HierarchyError:
-                    if hierarchy == "always":
+                    # a sketch pins the hierarchical route: a silent flat
+                    # fallback would ignore its hard constraints
+                    if hierarchy == "always" or self.sketch is not None:
                         raise
             return self._all_reduce_impl(g, bytes=bytes, pipelined=pipelined)
 

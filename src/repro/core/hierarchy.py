@@ -69,6 +69,8 @@ from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine, \
     time_reversed
 from repro.core.registry import renumber_chunks
+from repro.core.traffic import CommSketch, SketchInfeasibleError, \
+    TrafficEngineer
 from repro.topology.topology import Topology, TopologyView
 
 # pipeline="auto" pipelines fabrics up to this many group members; larger
@@ -198,16 +200,37 @@ class HierarchicalSynthesizer:
         self._pod_dist_from_gw: dict[tuple[int, int], list[int]] = {}
         self._reach_cache: dict[tuple[int, int], list] = {}
         self._ingress_cache: dict[tuple[int, int], int] = {}
+        self._nearest_cache: dict[tuple[int, int], int] = {}
         # dest-set -> {pod: members} buckets, memoized by frozenset identity
         # (bulk collectives share ONE dests object across all conditions)
         self._dest_buckets: dict[int, tuple] = {}
-        # All-to-All gateway selection: "aligned" cycles pod-pair-aligned
-        # gateway pairs (few distinct inter endpoints, longest replication
-        # runs), "nearest" routes via the gateways closest to each
-        # source/destination (shortest intra legs, fewest transfers),
-        # "auto" picks nearest on dense boundary fabrics and falls back
-        # per-chunk where only aligned gateways are reachable.
-        self.gateway_strategy = "auto"
+        # Gateway selection strategy for the inter-pod phase:
+        #   "te"          — min-max link-load traffic engineering over the
+        #                   boundary fabric (see repro.core.traffic)
+        #   "round_robin" — legacy ordinal cycling (optimal only on
+        #                   homogeneous boundaries, where equal counts mean
+        #                   equal time)
+        #   "aligned"     — All-to-All only: pod-pair-aligned gateway
+        #                   cycling (few distinct inter endpoints, longest
+        #                   replication runs)
+        #   "nearest"     — All-to-All only: gateways closest to each
+        #                   source/destination (shortest intra legs)
+        #   "auto"        — "te" when some pod's gateway uplinks are
+        #                   mutually heterogeneous or a sketch is present
+        #                   (round-robin counts balance load exactly when
+        #                   the uplinks they cycle over are uniform, so TE
+        #                   engages exactly where count-balancing breaks),
+        #                   else the legacy per-collective default.
+        # A CommSketch always routes through the TE assigner: its
+        # constraints are hard, and only the engineer enforces them.
+        self.gateway_strategy = getattr(engine, "gateway_strategy", "auto")
+        self.sketch: CommSketch | None = getattr(engine, "sketch", None)
+        # canonical boundary routes, shared across TrafficEngineer
+        # instances (routes depend on the fabric, not on load state)
+        self._te_routes: dict = {}
+        self._gateway_cands: dict[int, list[int]] = {}
+        self._auto_te: bool | None = None  # memoized "auto" resolution
+        self._attach: dict[int, tuple[float, float]] | None = None
 
     # -- eligibility --------------------------------------------------------
 
@@ -258,9 +281,216 @@ class HierarchicalSynthesizer:
         return ctx
 
     def _boundary(self) -> TopologyView:
+        """The boundary fabric the inter phase runs on — with the sketch's
+        node/link exclusions carved out, so reachability, TE assignment and
+        inter-phase synthesis physically cannot touch excluded hardware."""
         if self._bview is None:
-            self._bview = self.topology.boundary_subtopology()
+            bview = self.topology.boundary_subtopology()
+            sk = self.sketch
+            if sk is not None and sk.excludes_hardware:
+                drop = sk.exclude_nodes
+                keep_nodes = [n for n in bview.nodes if n not in drop]
+                keep_links = [
+                    l for l in bview.links
+                    if l not in sk.exclude_links
+                    and self.topology.links[l].src not in drop
+                    and self.topology.links[l].dst not in drop
+                ]
+                bview = self.topology._extract(
+                    keep_nodes, keep_links,
+                    f"{self.topology.name}:boundary:sketch",
+                )
+            self._bview = bview
         return self._bview
+
+    def _effective_strategy(self) -> str:
+        """Resolve ``gateway_strategy`` for this fabric. A sketch always
+        engages the traffic engineer (only it enforces the constraints);
+        "auto" engages it exactly where round-robin's count balancing stops
+        being load balancing — some pod's gateway uplinks mutually
+        heterogeneous, so equal chunk counts mean unequal busy time — and
+        keeps the legacy per-collective default elsewhere (including
+        fabrics whose tiers differ but whose uplinks are uniform within
+        each pod, where count cycling is already load-balanced and the
+        engineer's attachment model adds nothing). Deterministic per
+        (fabric, strategy, sketch), so the resolved value is also the
+        registry route label."""
+        if self.sketch is not None:
+            return "te"
+        s = self.gateway_strategy
+        if s != "auto":
+            return s
+        if self._auto_te is None:
+            self._auto_te = self._skewed_uplinks()
+        return "te" if self._auto_te else "auto"
+
+    def _skewed_uplinks(self) -> bool:
+        """True iff some pod's gateways attach to the boundary fabric over
+        mutually heterogeneous links — the regime where round-robin's
+        per-count cycling provably misbalances busy time."""
+        bsub = self._boundary().topology
+        bl = self._boundary().to_local
+        for p in range(self.topology.num_pods):
+            timings = set()
+            for g in self.topology.gateways(p):
+                gl = bl.get(g)
+                if gl is None:
+                    continue
+                for l in bsub.out_links(gl):
+                    timings.add((l.alpha, l.beta))
+                    if len(timings) > 1:
+                        return True
+        return False
+
+    def _gateway_candidates(self, p: int) -> list[int]:
+        """Pod-``p`` gateways usable by the traffic engineer: present on
+        the (possibly sketch-filtered) boundary fabric and allowed by the
+        sketch's affinity. Affinity ids are validated once per pod."""
+        got = self._gateway_cands.get(p)
+        if got is not None:
+            return got
+        ctx = self._pod(p)
+        bl = self._boundary().to_local
+        gws = [g for g in ctx.gateways if g in bl]
+        sk = self.sketch
+        if sk is not None:
+            allowed = sk.allowed_gateways(p)
+            if allowed is not None:
+                bad = sorted(set(allowed) - set(ctx.gateways))
+                if bad:
+                    raise SketchInfeasibleError(
+                        f"sketch gateway_affinity for pod {p} names "
+                        f"non-gateway nodes {bad}")
+                aset = set(allowed)
+                gws = [g for g in gws if g in aset]
+        if not gws:
+            if sk is not None:
+                raise SketchInfeasibleError(
+                    f"pod {p}: sketch leaves no usable boundary gateway")
+            raise HierarchyError(
+                f"pod {p} has no gateway on the boundary fabric")
+        self._gateway_cands[p] = gws
+        return gws
+
+    def _attach_costs(self) -> dict[int, tuple[float, float, int]]:
+        """Per-gateway (alpha, beta, out-degree) of the fastest pod-internal
+        link adjacent to the gateway — the raw material for the engineer's
+        virtual attachment links, modeling the intra/scatter serialization
+        that funneling chunks through one gateway costs inside its pod.
+        Without this the assigner would route every chunk through the
+        fastest uplink's gateway and the pod phases would serialize behind
+        that single node."""
+        if self._attach is None:
+            attach: dict[int, tuple[float, float, int]] = {}
+            for p in range(self.topology.num_pods):
+                ctx = self._pod(p)
+                sub = ctx.view.topology
+                for g, gl in zip(ctx.gateways, ctx.gateways_local):
+                    links = sub.out_links(gl)
+                    if not links:
+                        continue
+                    l0 = min(links, key=lambda l: (l.transfer_time(1.0),
+                                                   l.id))
+                    attach[g] = (l0.alpha, l0.beta, len(links))
+            self._attach = attach
+        return self._attach
+
+    def _traffic_engineer(self, *, multicast: bool) -> TrafficEngineer:
+        """A fresh engineer over the boundary fabric. ``multicast`` picks
+        the ingress-side attachment model: a multicast scatter forwards
+        each chunk over every source link of its fan-out tree (full link
+        time per chunk), a unicast delivery spreads chunks across the
+        gateway's pod links (per-chunk cost divided by out-degree). The
+        egress side is always fan-in: deg-divided."""
+        bview = self._boundary()
+        raw = self._attach_costs()
+        eg = {g: (a / d, b / d) for g, (a, b, d) in raw.items()}
+        if multicast:
+            ing = {g: (a, b) for g, (a, b, _) in raw.items()}
+        else:
+            ing = eg
+        return TrafficEngineer(bview.topology, bview.to_local,
+                               sketch=self.sketch,
+                               route_cache=self._te_routes,
+                               attach_egress=eg, attach_ingress=ing)
+
+    def _assign_te(self, demands, egress, ingress) -> None:
+        """Run the traffic engineer over the collected spanning demand
+        matrix and write the chosen gateways back into the routing maps
+        (``egress[chunk]``, ``ingress[(chunk, dest pod)]``). Without a
+        sketch, the legacy round-robin choice is scored under the same load
+        model and adopted if strictly better (never-worse guarantee); with
+        a sketch, round-robin may violate hard constraints and is never
+        consulted."""
+        te = self._traffic_engineer(multicast=True)
+        rr = None
+        if self.sketch is None:
+            rr = []
+            for c, p, qs, k in demands:
+                gws = self._pod(p).gateways
+                e = gws[k % len(gws)]
+                picks = {}
+                for q in qs:
+                    cand = self._reachable_gateways(e, q)
+                    picks[q] = cand[k % len(cand)][2]
+                rr.append((e, picks))
+        for c, p, qs, k in demands:
+            cands = {q: self._gateway_candidates(q) for q in qs}
+            try:
+                te.assign(c.chunk, p, self._gateway_candidates(p), cands,
+                          c.bytes)
+            except SketchInfeasibleError:
+                raise
+            except ValueError as err:
+                raise HierarchyError(str(err)) from err
+        te.refine()
+        if rr is not None:
+            te.better_of(rr)
+        for key, e, picks in te.assignments():
+            egress[key] = e
+            for q, i in picks.items():
+                ingress[(key, q)] = i
+
+    def _assign_te_a2a(self, demands, egress, ingress) -> None:
+        """All-to-All variant of :meth:`_assign_te`: one destination pod
+        per demand, with an ingress tie-break preferring the gateway
+        nearest the final destination inside its pod (the legacy
+        nearest-ingress objective, now subordinate to link load)."""
+        te = self._traffic_engineer(multicast=False)
+        rr = None
+        if self.sketch is None:
+            rr = []
+            for c, p, q, d, k in demands:
+                gws = self._pod(p).gateways
+                e = gws[k % len(gws)]
+                cand = self._reachable_gateways(e, q)
+                rr.append((e, {q: cand[k % len(cand)][2]}))
+        gw_local: dict[int, dict[int, int]] = {}
+        for c, p, q, d, k in demands:
+            gl = gw_local.get(q)
+            if gl is None:
+                ctxq = self._pod(q)
+                gl = gw_local[q] = dict(zip(ctxq.gateways,
+                                            ctxq.gateways_local))
+            dl = self._pod(q).view.to_local[d]
+
+            def tie(_q, g, __q=q, __dl=dl, __gl=gl):
+                return self._dist_from_gateway(__q, __gl[g])[__dl]
+
+            try:
+                te.assign(c.chunk, p, self._gateway_candidates(p),
+                          {q: self._gateway_candidates(q)}, c.bytes,
+                          ingress_tie=tie)
+            except SketchInfeasibleError:
+                raise
+            except ValueError as err:
+                raise HierarchyError(str(err)) from err
+        te.refine()
+        if rr is not None:
+            te.better_of(rr)
+        for key, e, picks in te.assignments():
+            egress[key] = e
+            ingress[key] = next(iter(picks.values()))
 
     def _bdist_row(self, src_local: int) -> list[int]:
         """Hop distances from one bsub-local node over the boundary fabric."""
@@ -295,7 +525,13 @@ class HierarchicalSynthesizer:
 
     def _nearest_gateway(self, p: int, node: int) -> int:
         """The pod-``p`` gateway nearest to ``node`` (global id), measured
-        node->gateway; ties break on gateway order (pod-locally symmetric)."""
+        node->gateway; ties break on gateway order (pod-locally symmetric).
+        Memoized per (pod, node): bulk All-to-Alls resolve the same source
+        for every remote destination, and the underlying per-gateway BFS
+        rows are themselves shared through :meth:`_dist_to_gateway`."""
+        got = self._nearest_cache.get((p, node))
+        if got is not None:
+            return got
         ctx = self._pod(p)
         nl = ctx.view.to_local[node]
         best, best_d = None, None
@@ -307,7 +543,9 @@ class HierarchicalSynthesizer:
                 best, best_d = gi, d
         if best is None:
             raise HierarchyError(f"node {node} cannot reach pod {p} gateways")
-        return ctx.gateways[best]
+        got = ctx.gateways[best]
+        self._nearest_cache[(p, node)] = got
+        return got
 
     def _reachable_gateways(self, egress: int, q: int) -> list[tuple[int, int, int]]:
         """Pod-``q`` gateways reachable from global gateway ``egress`` over
@@ -319,16 +557,21 @@ class HierarchicalSynthesizer:
         if got is not None:
             return got
         bview = self._boundary()
-        row = self._bdist_row(bview.to_local[egress])
+        bl = bview.to_local
         ctx = self._pod(q)
         out = []
-        for gi, g in enumerate(ctx.gateways):
-            d = row[bview.to_local[g]]
-            if d >= 0:
-                out.append((d, gi, g))
+        el = bl.get(egress)
+        if el is not None:
+            row = self._bdist_row(el)
+            for gi, g in enumerate(ctx.gateways):
+                j = bl.get(g)
+                if j is not None and row[j] >= 0:
+                    out.append((row[j], gi, g))
         out.sort()
         if not out:
-            raise HierarchyError(
+            err = (SketchInfeasibleError if self.sketch is not None
+                   else HierarchyError)
+            raise err(
                 f"no pod-{q} gateway reachable from gateway {egress} over "
                 f"the boundary fabric"
             )
@@ -388,10 +631,16 @@ class HierarchicalSynthesizer:
         def synth(_group):
             return self._phase_algorithm(sub, conds, kind, replicate)
 
+        # the phase key carries the resolved gateway strategy and the
+        # sketch fingerprint: an inter phase routed round-robin must never
+        # satisfy a TE or sketch-constrained request for the same
+        # sub-fabric/conditions (and vice versa)
+        sk = self.sketch
         return self.registry.get_or_synthesize(
             sub, f"hier:{kind}", range(len(sub.npus)), synth,
             params=(sub.partition_fingerprint(), _signature(conds),
-                    replicate),
+                    replicate, self._effective_strategy(),
+                    sk.fingerprint() if sk is not None else None),
         )
 
     def _phase_algorithm(
@@ -423,7 +672,13 @@ class HierarchicalSynthesizer:
         ent = self._nested.get(id(sub))
         if ent is None or ent[0] is not sub:
             eng = SynthesisEngine(sub, registry=self.registry)
-            ent = (sub, HierarchicalSynthesizer(eng))
+            h = HierarchicalSynthesizer(eng)
+            # the strategy recurses (a heterogeneous rack boundary inside a
+            # pod engages TE there too); the sketch does NOT — its node and
+            # link ids are top-level-global and constrain only the
+            # top-level inter-pod phase
+            h.gateway_strategy = self.gateway_strategy
+            ent = (sub, h)
             self._nested[id(sub)] = ent
         return ent[1]
 
@@ -443,10 +698,17 @@ class HierarchicalSynthesizer:
         multicasts the chunk from its egress gateway to one ingress gateway
         per remote destination pod over the boundary fabric; per-pod
         scatter phases deliver arrived chunks to their in-pod destinations.
-        Egress gateways round-robin per source pod and ingress gateways
-        round-robin over the reachable candidates, so the per-gateway load
-        histograms are pod-position-independent and isomorphic pods keep
-        sharing one registry-cached plan per phase kind."""
+
+        Gateway selection follows :meth:`_effective_strategy`: under the
+        traffic engineer each (chunk, src-pod, dst-pods) demand is assigned
+        the (egress, ingress, boundary path) tree minimizing peak link
+        busy-time (with the legacy round-robin assignment adopted wholesale
+        if it models strictly better — the never-worse guarantee); the
+        legacy path round-robins egress per source pod and ingress over the
+        reachable candidates. Both are deterministic, and the per-gateway
+        load histograms stay pod-position-independent on symmetric fabrics,
+        so isomorphic pods keep sharing one registry-cached plan per phase
+        kind."""
         part = self.topology.partition
         if part is None:
             raise HierarchyError(f"{self.topology.name}: no partition set")
@@ -471,15 +733,19 @@ class HierarchicalSynthesizer:
             if not self.topology.gateways(p):
                 raise HierarchyError(f"pod {p} has no gateway NPUs")
 
-        # per-chunk routing: egress gateway (round-robin by the chunk's
-        # ordinal within its source pod), ingress gateway per destination
-        # pod (round-robin over the reachable candidates)
+        use_te = self._effective_strategy() == "te"
+
+        # per-chunk routing: egress gateway + one ingress gateway per
+        # destination pod — min-max link-load TE assignment over the
+        # boundary fabric, or legacy round-robin by the chunk's ordinal
+        # within its source pod
         seen: dict[int, int] = {}
         egress: dict[int, int] = {}
         ingress: dict[tuple[int, int], int] = {}
         dest_pods: dict[int, list[int]] = {}
         by_src_pod: dict[int, list[Condition]] = {p: [] for p in involved}
         by_dst_pod: dict[int, list[Condition]] = {p: [] for p in involved}
+        demands: list[tuple[Condition, int, list[int], int]] = []
         for c in conds:
             p = part[c.src]
             by_src_pod[p].append(c)
@@ -489,12 +755,18 @@ class HierarchicalSynthesizer:
             dest_pods[c.chunk] = qs
             if not qs:
                 continue  # same-pod condition: intra phase handles it fully
+            for q in qs:
+                by_dst_pod[q].append(c)
+            if use_te:
+                demands.append((c, p, qs, k))
+                continue
             gws = self._pod(p).gateways
             egress[c.chunk] = gws[k % len(gws)]
             for q in qs:
                 cand = self._reachable_gateways(egress[c.chunk], q)
                 ingress[(c.chunk, q)] = cand[k % len(cand)][2]
-                by_dst_pod[q].append(c)
+        if use_te:
+            self._assign_te(demands, egress, ingress)
 
         def intra_conds(p, ctx):
             out = []
@@ -614,7 +886,12 @@ class HierarchicalSynthesizer:
         pair_dense: dict[tuple[int, int], bool] = {}
         pair_ord: dict[tuple[int, int], int] = {}
 
-        use_aligned = self.gateway_strategy == "aligned"
+        strategy = self._effective_strategy()
+        use_aligned = strategy == "aligned"
+        use_te = strategy == "te"
+        use_rr = strategy == "round_robin"
+        seen: dict[int, int] = {}  # per-source-pod cross-pod chunk ordinal
+        demands: list[tuple[Condition, int, int, int, int]] = []
 
         def _pair_dense(p: int, q: int) -> bool:
             if not use_aligned:
@@ -639,6 +916,18 @@ class HierarchicalSynthesizer:
             if p == q:
                 continue
             by_dst_pod[q].append(c)
+            k2 = seen.get(p, 0)
+            seen[p] = k2 + 1
+            if use_te:
+                demands.append((c, p, q, d, k2))
+                continue
+            if use_rr:
+                gws = self._pod(p).gateways
+                e = gws[k2 % len(gws)]
+                egress[c.chunk] = e
+                cand = self._reachable_gateways(e, q)
+                ingress[c.chunk] = cand[k2 % len(cand)][2]
+                continue
             if _pair_dense(p, q):
                 k = pair_ord.get((p, q), 0)
                 pair_ord[(p, q)] = k + 1
@@ -664,6 +953,8 @@ class HierarchicalSynthesizer:
                 )
                 i = self._ingress_cache[(e, d)] = best[2]
             ingress[c.chunk] = i
+        if use_te:
+            self._assign_te_a2a(demands, egress, ingress)
 
         def intra_conds(p, ctx):
             out = []
@@ -733,6 +1024,9 @@ class HierarchicalSynthesizer:
                                       registry=self.registry)
             self._rev_hier = HierarchicalSynthesizer(rev_eng)
             self._rev_hier.gateway_strategy = self.gateway_strategy
+            # link ids carry over between orientations, so the sketch's
+            # exclusions and affinities mean the same hardware there
+            self._rev_hier.sketch = self.sketch
         return self._rev_hier
 
     @staticmethod

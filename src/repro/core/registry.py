@@ -45,8 +45,10 @@ _MAX_AUTOMORPHISMS = 4096
 # one. v2: array-backed TEN + batched-frontier BFS core. v3: recursive
 # multi-level hierarchy — hierarchical route/phase params now carry the
 # partition-tree fingerprint, and pod phases on nested-partitioned
-# sub-topologies synthesize recursively.
-SCHEMA_VERSION = 3
+# sub-topologies synthesize recursively. v4: inter-pod traffic engineering
+# — hierarchical route and hier:* phase params now carry the resolved
+# gateway strategy and the CommSketch fingerprint.
+SCHEMA_VERSION = 4
 
 
 # ---------------------------------------------------------------------------

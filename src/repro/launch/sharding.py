@@ -255,7 +255,8 @@ class MeshCollectivePlanner:
     deep the routing goes.
     """
 
-    def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None):
+    def __init__(self, topo, axis_sizes: dict[str, int], *, registry=None,
+                 gateway_strategy: str = "auto", sketch=None):
         from repro.core.engine import SynthesisEngine
         from repro.core.registry import default_registry
 
@@ -268,7 +269,12 @@ class MeshCollectivePlanner:
                 f"but topology has {len(topo.npus)} NPUs"
             )
         self.registry = registry if registry is not None else default_registry()
-        self.engine = SynthesisEngine(topo, registry=self.registry)
+        # gateway_strategy/sketch steer the hierarchical inter-pod phase
+        # (see repro.core.traffic) — e.g. a CommSketch keeping the
+        # data-parallel axis' traffic off a storage plane's uplinks
+        self.engine = SynthesisEngine(topo, registry=self.registry,
+                                      gateway_strategy=gateway_strategy,
+                                      sketch=sketch)
         self._ranks = np.arange(int(np.prod(shape))).reshape(shape)
 
     def axis_groups(self, axis: str) -> list[list[int]]:

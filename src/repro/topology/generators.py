@@ -11,6 +11,8 @@ bytes=1 -> 1 us per hop per chunk.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 from repro.topology.topology import NodeType, Topology
 
 
@@ -198,6 +200,8 @@ def multi_pod(
     dci_alpha: float = 10.0,
     dci_ports_per_pod: int = 16,
     unit_links: bool = False,
+    dci_port_gbps: Sequence[float] | None = None,
+    dci_ports_by_pod: Sequence[int] | None = None,
 ) -> Topology:
     """num_pods TPU pods; pod edge devices uplink to a DCI switch.
 
@@ -207,10 +211,36 @@ def multi_pod(
     torus, DCI switch shared) is set automatically, so hierarchical
     synthesis applies out of the box.
 
+    Asymmetric-DCI variants (the traffic-engineering benchmark fabrics):
+
+    * ``dci_port_gbps`` — per-uplink bandwidths in GB/s; uplink ``c`` of
+      every pod runs at ``dci_port_gbps[c]`` (same profile per pod, so the
+      pods stay isomorphic while their uplinks are mutually heterogeneous).
+      When given it also sets the uplink count, overriding
+      ``dci_ports_per_pod``.
+    * ``dci_ports_by_pod`` — per-pod uplink *counts* (length
+      ``num_pods``), for skewed-degree fabrics.
+
     ``unit_links=True`` collapses every link to (alpha=0, beta=1) — the
     paper's homogeneous unit-time regime — so the integer TEN fast path
-    drives all phases; used by the scale benchmarks.
+    drives all phases; used by the scale benchmarks. It is incompatible
+    with ``dci_port_gbps`` (unit links are uniform by definition).
     """
+    if dci_port_gbps is not None:
+        if unit_links:
+            raise ValueError(
+                "dci_port_gbps is incompatible with unit_links=True")
+        dci_port_gbps = [float(g) for g in dci_port_gbps]
+        if not dci_port_gbps or min(dci_port_gbps) <= 0:
+            raise ValueError("dci_port_gbps must be non-empty positives")
+    if dci_ports_by_pod is not None:
+        dci_ports_by_pod = [int(k) for k in dci_ports_by_pod]
+        if len(dci_ports_by_pod) != num_pods:
+            raise ValueError(
+                f"dci_ports_by_pod needs {num_pods} entries, got "
+                f"{len(dci_ports_by_pod)}")
+        if min(dci_ports_by_pod) < 1:
+            raise ValueError("every pod needs >= 1 DCI uplink")
     beta_ici = (1.0 / (link_gbps * 1e9)) * (1 << 20) * 1e6
     beta_dci = (1.0 / (dci_gbps * 1e9)) * (1 << 20) * 1e6
     alpha_ici, alpha_dci = 1.0, dci_alpha
@@ -218,6 +248,8 @@ def multi_pod(
         alpha_ici = alpha_dci = 0.0
         beta_ici = beta_dci = 1.0
     suffix = "_unit" if unit_links else ""
+    if dci_port_gbps is not None or dci_ports_by_pod is not None:
+        suffix += "_asym"
     topo = Topology(f"multi_pod_{num_pods}x{rows}x{cols}{suffix}")
     per_pod = rows * cols
     topo.add_npus(num_pods * per_pod)
@@ -228,9 +260,18 @@ def multi_pod(
                 topo.add_bidir_link(idx(p, r, c), idx(p, r, (c + 1) % cols), alpha_ici, beta_ici)
                 topo.add_bidir_link(idx(p, r, c), idx(p, (r + 1) % rows, c), alpha_ici, beta_ici)
     dci = topo.add_node(NodeType.SWITCH, buffer_limit=None, multicast=True)
+    base_ports = (len(dci_port_gbps) if dci_port_gbps is not None
+                  else dci_ports_per_pod)
     for p in range(num_pods):
-        for c in range(min(dci_ports_per_pod, cols)):
-            topo.add_bidir_link(idx(p, 0, c), dci, alpha_dci, beta_dci)
+        ports = dci_ports_by_pod[p] if dci_ports_by_pod is not None \
+            else base_ports
+        for c in range(min(ports, cols)):
+            if dci_port_gbps is not None:
+                gbps = dci_port_gbps[c % len(dci_port_gbps)]
+                beta_c = (1.0 / (gbps * 1e9)) * (1 << 20) * 1e6
+            else:
+                beta_c = beta_dci
+            topo.add_bidir_link(idx(p, 0, c), dci, alpha_dci, beta_c)
     topo.set_partition(
         [n // per_pod for n in range(num_pods * per_pod)] + [-1]
     )
@@ -247,11 +288,18 @@ def three_level(
     dci_alpha: float = 10.0,
     dci_ports_per_pod: int | None = None,
     unit_links: bool = False,
+    dci_port_gbps: Sequence[float] | None = None,
 ) -> Topology:
     """Three-level datacenter fabric: racks of NPUs, pods of racks, and a
     DCI plane of pods — the pods-of-pods regime where flat TEN search is
     hopeless and even one partition level leaves per-pod sub-problems too
     large.
+
+    ``dci_port_gbps`` gives per-uplink DCI bandwidths (GB/s): the rack-``r``
+    uplink of every pod runs at ``dci_port_gbps[r]`` — the same profile per
+    pod, so pods stay isomorphic (pod rotation remains an automorphism)
+    while the DCI plane is heterogeneous. Sets the uplink count when
+    ``dci_ports_per_pod`` is not given; incompatible with ``unit_links``.
 
     Structure (NPU ids dense first: pod p, rack r, slot i at
     ``(p*R + r)*K + i``):
@@ -278,6 +326,15 @@ def three_level(
     if dci_ports_per_pod is not None and dci_ports_per_pod < 1:
         raise ValueError(
             "dci_ports_per_pod must be >= 1 (0 would disconnect the pods)")
+    if dci_port_gbps is not None:
+        if unit_links:
+            raise ValueError(
+                "dci_port_gbps is incompatible with unit_links=True")
+        dci_port_gbps = [float(g) for g in dci_port_gbps]
+        if not dci_port_gbps or min(dci_port_gbps) <= 0:
+            raise ValueError("dci_port_gbps must be non-empty positives")
+        if dci_ports_per_pod is None:
+            dci_ports_per_pod = len(dci_port_gbps)
     ports = racks_per_pod if dci_ports_per_pod is None else min(
         dci_ports_per_pod, racks_per_pod)
     beta_rack = (1.0 / (rack_gbps * 1e9)) * (1 << 20) * 1e6
@@ -310,7 +367,11 @@ def three_level(
     dci = topo.add_node(NodeType.SWITCH)
     for p in range(num_pods):
         for r in range(ports):
-            topo.add_bidir_link(nid(p, r, 0), dci, alpha_dci, beta_dci)
+            beta_r = beta_dci
+            if dci_port_gbps is not None:
+                gbps = dci_port_gbps[r % len(dci_port_gbps)]
+                beta_r = (1.0 / (gbps * 1e9)) * (1 << 20) * 1e6
+            topo.add_bidir_link(nid(p, r, 0), dci, alpha_dci, beta_r)
     paths: list = [
         (n // per_pod, (n % per_pod) // per_rack)
         for n in range(num_pods * per_pod)
@@ -326,7 +387,11 @@ def three_level(
     ) + tuple(n_npus + (p + 1) % num_pods
               for p in range(num_pods)) + (dci,)
     topo.automorphism_generators = [pod_rot]
-    if ports == racks_per_pod:
+    # ... and only when the uplinks are mutually uniform: with per-port
+    # DCI bandwidths, rotating racks would map a fast uplink onto a slow one
+    uniform_ports = dci_port_gbps is None or len(
+        {dci_port_gbps[r % len(dci_port_gbps)] for r in range(ports)}) == 1
+    if ports == racks_per_pod and uniform_ports:
         rack_rot = tuple(
             (n // per_pod) * per_pod + (n % per_pod + per_rack) % per_pod
             for n in range(n_npus)

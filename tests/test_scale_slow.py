@@ -23,6 +23,10 @@ _BUDGET_SECONDS = 120.0
 # validation on a dev box; generous headroom for CI-class machines
 _HIER3_BUDGET_SECONDS = 300.0
 
+# cold 512-NPU TE-vs-RR comparison: ~7s for both strategies + bulk
+# validation on a dev box; generous headroom for CI-class machines
+_TE_BUDGET_SECONDS = 180.0
+
 
 @pytest.mark.slow
 def test_mesh12x12_all_to_all_within_budget():
@@ -67,4 +71,33 @@ def test_three_level_2048_all_gather_within_budget():
     assert wall_s < _HIER3_BUDGET_SECONDS, (
         f"three-level 2048-NPU All-Gather took {wall_s:.1f}s (synthesis "
         f"{synth_s:.1f}s), budget {_HIER3_BUDGET_SECONDS}s"
+    )
+
+
+@pytest.mark.slow
+def test_three_level_512_te_vs_rr_within_budget():
+    """Cold 512-NPU three-level All-Gather under both gateway strategies:
+    the traffic-engineered assignment (greedy min-max + refinement over
+    512 multicast demands) must stay inside the wall-clock budget — the
+    scaling gate for the TE machinery itself — and must land within a few
+    percent of round-robin on this uniform fabric (count cycling is
+    already load-balanced there; only tie-break alignment differs)."""
+    t0 = time.perf_counter()
+    spans = {}
+    for strategy in ("round_robin", "te"):
+        topo = three_level(8, 8, 8, unit_links=True)
+        eng = SynthesisEngine(topo, registry=AlgorithmRegistry(),
+                              gateway_strategy=strategy)
+        alg = eng.all_gather(topo.npus)
+        alg.validate(mode="bulk")
+        assert alg.name == "pccl_hier_all_gather"
+        spans[strategy] = alg.makespan
+    wall_s = time.perf_counter() - t0
+    assert spans["te"] <= 1.05 * spans["round_robin"], (
+        f"TE makespan {spans['te']} strays from round-robin "
+        f"{spans['round_robin']} on a uniform 512-NPU fabric")
+    assert wall_s < _TE_BUDGET_SECONDS, (
+        f"512-NPU TE-vs-RR comparison took {wall_s:.1f}s, budget "
+        f"{_TE_BUDGET_SECONDS}s — the TE assignment machinery has "
+        f"stopped scaling"
     )
