@@ -60,6 +60,7 @@ def main() -> None:
         hetero_switch,
         hierarchical,
         pg_sensitivity,
+        plan_store,
         process_group,
         registry_amortization,
         roofline,
@@ -77,6 +78,7 @@ def main() -> None:
         ("fig18", utilization),
         ("fig19", pg_sensitivity),
         ("fig_hier", hierarchical),
+        ("fig_plan", plan_store),
         ("registry", registry_amortization),
         ("roofline", roofline),
     ]

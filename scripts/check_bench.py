@@ -38,7 +38,7 @@ _BENCH_OUT = _BASELINE  # benchmarks.run writes to the repo-root path
 
 # deterministic per-row meta fields and their better-direction
 LOWER_BETTER = {"makespan", "transfers", "hier_makespan", "ratio",
-                "pccl_t", "misses"}
+                "pccl_t", "misses", "plan_bytes", "disk_bytes"}
 HIGHER_BETTER = {"speedup", "pccl_rel_bw"}
 # fields identifying the row's configuration; a mismatch means the two rows
 # measured different problems (quick vs full sizes) and must not be compared.
@@ -56,7 +56,8 @@ WALL_CLOCK_TOLERANCE = 3.0
 # cold-synthesis families specifically: a loose "fig_hier_" would be
 # satisfied by the fig_hier_vs_flat_*/fig_hier_reuse rows alone.
 REQUIRED_ROW_PREFIXES = ("fig_hier_ag_", "fig_hier_rs_",
-                         "fig_hier3_ag_", "fig_hier3_ar_", "fig_te_")
+                         "fig_hier3_ag_", "fig_hier3_ar_", "fig_te_",
+                         "fig_plan_")
 
 
 def parse_meta(meta: str) -> dict[str, object]:

@@ -2,7 +2,12 @@
 contribution), plus the validation oracle, baselines, and the alpha-beta
 simulator used for evaluation."""
 
-from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.algorithm import (
+    CollectiveAlgorithm,
+    Transfer,
+    TransferColumns,
+    TransferList,
+)
 from repro.core.conditions import (
     ChunkIds,
     Condition,
@@ -63,10 +68,22 @@ from repro.core.translate import (
     to_msccl_json,
     to_ppermute_program,
 )
+from repro.core.planservice import PlanService
+from repro.core.serialize import (
+    load_plan_npz,
+    plan_disk_bytes,
+    save_plan_npz,
+)
 
 __all__ = [
     "CollectiveAlgorithm",
     "Transfer",
+    "TransferColumns",
+    "TransferList",
+    "PlanService",
+    "load_plan_npz",
+    "plan_disk_bytes",
+    "save_plan_npz",
     "SynthesisEngine",
     "PhasePlan",
     "PhaseSpec",

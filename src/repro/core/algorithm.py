@@ -10,13 +10,21 @@ checks every invariant the synthesizer promises:
   * switch buffer limits and multicast capability (paper §4.7),
   * post-conditions: every destination holds its chunk; reduced chunks carry
     each contribution exactly once (no double counting).
+
+Storage is **columnar**: the source of truth for a schedule is a
+:class:`TransferColumns` struct of parallel numpy arrays
+(``chunk/link/src/dst/start/end/reduce``), ~37 bytes/row instead of the
+~150+ bytes a boxed :class:`Transfer` object costs. Every aggregate
+(`makespan`, `link_busy_time`, bulk validation, sorting) runs directly on
+the arrays; the object API survives through :class:`TransferList`, a lazy
+``Sequence[Transfer]`` view that materializes rows on demand.
 """
 
 from __future__ import annotations
 
-import operator
 from collections import defaultdict
-from dataclasses import dataclass, field
+from collections.abc import Sequence
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -25,9 +33,14 @@ from repro.topology.topology import Topology
 
 _EPS = 1e-6
 
-# transfer lists past this size sort via numpy lexsort (stable, same order
-# as sorted()); below it, plain sorted() wins on constant factors
+# historical threshold between the object-sort and lexsort paths; sorting is
+# always columnar now, but `validate(mode="auto")` still uses it as the
+# schedule size past which the vectorized validator takes over
 _VECTOR_SORT_MIN = 1 << 17
+
+# row block size for the lazy Transfer iterator: tolist() per block keeps
+# python-object churn off the hot loop without materializing the whole plan
+_ITER_BLOCK = 1 << 16
 
 
 class _NotInForest(Exception):
@@ -53,40 +66,283 @@ class Transfer:
         return self.start < other.end - _EPS and other.start < self.end - _EPS
 
 
-@dataclass
+# columnar field order and dtypes; link/src/dst are int32 (fabrics stay well
+# under 2^31 links), chunk is int64 (hierarchical compositions renumber into
+# wide global id spaces)
+_COLUMN_DTYPES = (
+    ("chunk", np.int64),
+    ("link", np.int32),
+    ("src", np.int32),
+    ("dst", np.int32),
+    ("start", np.float64),
+    ("end", np.float64),
+    ("reduce", np.bool_),
+)
+
+
+def remap_ids(values: np.ndarray, mapping: dict) -> np.ndarray:
+    """Vectorized ``mapping.get(v, v)`` over an int array: ids present in
+    `mapping` are translated, everything else passes through unchanged."""
+    if not len(mapping) or not len(values):
+        return values
+    keys = np.fromiter(mapping.keys(), np.int64, len(mapping))
+    vals = np.fromiter(mapping.values(), np.int64, len(mapping))
+    order = np.argsort(keys)
+    keys, vals = keys[order], vals[order]
+    pos = np.searchsorted(keys, values)
+    pos_c = np.minimum(pos, len(keys) - 1)
+    hit = keys[pos_c] == values
+    return np.where(hit, vals[pos_c], values)
+
+
+class TransferColumns:
+    """Parallel arrays holding one schedule: the columnar source of truth.
+
+    Arrays are treated as immutable after construction (they may be
+    zero-copy views into an mmap'ed registry entry) — every transform
+    (`shifted`, `take`, `relabeled`, ...) returns a new instance, sharing
+    unchanged columns. ``presorted`` records that rows are already in the
+    canonical ``(start, chunk, link)`` schedule order, letting loads of
+    persisted plans skip the sort (and the page-in it would force).
+    """
+
+    __slots__ = ("chunk", "link", "src", "dst", "start", "end", "reduce",
+                 "presorted")
+
+    def __init__(self, chunk, link, src, dst, start, end, reduce, *,
+                 presorted: bool = False):
+        self.chunk = np.asarray(chunk, np.int64)
+        self.link = np.asarray(link, np.int32)
+        self.src = np.asarray(src, np.int32)
+        self.dst = np.asarray(dst, np.int32)
+        self.start = np.asarray(start, np.float64)
+        self.end = np.asarray(end, np.float64)
+        self.reduce = np.asarray(reduce, np.bool_)
+        self.presorted = presorted
+
+    # -- construction --------------------------------------------------
+    @classmethod
+    def empty(cls) -> "TransferColumns":
+        return cls(*(np.empty(0, dt) for _, dt in _COLUMN_DTYPES),
+                   presorted=True)
+
+    @classmethod
+    def from_transfers(cls, transfers) -> "TransferColumns":
+        ts = transfers if isinstance(transfers, (list, tuple)) \
+            else list(transfers)
+        n = len(ts)
+        if not n:
+            return cls.empty()
+        return cls(
+            np.fromiter((t.chunk for t in ts), np.int64, n),
+            np.fromiter((t.link for t in ts), np.int32, n),
+            np.fromiter((t.src for t in ts), np.int32, n),
+            np.fromiter((t.dst for t in ts), np.int32, n),
+            np.fromiter((t.start for t in ts), np.float64, n),
+            np.fromiter((t.end for t in ts), np.float64, n),
+            np.fromiter((t.reduce for t in ts), np.bool_, n),
+        )
+
+    @classmethod
+    def concat(cls, blocks: list) -> "TransferColumns":
+        blocks = [b for b in blocks if len(b)]
+        if not blocks:
+            return cls.empty()
+        if len(blocks) == 1:
+            return blocks[0]
+        return cls(*(np.concatenate([getattr(b, f) for b in blocks])
+                     for f, _ in _COLUMN_DTYPES))
+
+    # -- basics --------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.chunk)
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes held by the seven column arrays (the plan's working set)."""
+        return sum(getattr(self, f).nbytes for f, _ in _COLUMN_DTYPES)
+
+    def row(self, i: int) -> Transfer:
+        return Transfer(int(self.chunk[i]), int(self.link[i]),
+                        int(self.src[i]), int(self.dst[i]),
+                        float(self.start[i]), float(self.end[i]),
+                        bool(self.reduce[i]))
+
+    # -- transforms (all pure) -----------------------------------------
+    def take(self, order: np.ndarray, *,
+             presorted: bool = False) -> "TransferColumns":
+        return TransferColumns(*(getattr(self, f)[order]
+                                 for f, _ in _COLUMN_DTYPES),
+                               presorted=presorted)
+
+    def sorted_schedule(self) -> "TransferColumns":
+        """Rows in canonical ``(start, chunk, link)`` order — the same
+        stable order ``sorted(key=attrgetter("start", "chunk", "link"))``
+        produced on the object path (``np.lexsort`` is stable)."""
+        if self.presorted or len(self) <= 1:
+            self.presorted = True
+            return self
+        order = np.lexsort((self.link, self.chunk, self.start))
+        if np.array_equal(order, np.arange(len(order))):
+            self.presorted = True
+            return self
+        return self.take(order, presorted=True)
+
+    def shifted(self, dt: float) -> "TransferColumns":
+        if dt == 0.0:
+            return self
+        return TransferColumns(self.chunk, self.link, self.src, self.dst,
+                               self.start + dt, self.end + dt, self.reduce,
+                               presorted=self.presorted)
+
+    def relabeled(self, node_map=None, link_map=None,
+                  chunk_map=None, shift: float = 0.0) -> "TransferColumns":
+        """Apply id translations (and an optional time shift) in one pass:
+        `node_map`/`link_map` are dense old->new arrays or sequences,
+        `chunk_map` a sparse dict (ids absent from it pass through)."""
+        chunk = self.chunk if not chunk_map \
+            else remap_ids(self.chunk, chunk_map)
+        link, src, dst = self.link, self.src, self.dst
+        if link_map is not None:
+            link = np.asarray(link_map, np.int64)[link].astype(np.int32)
+        if node_map is not None:
+            nm = np.asarray(node_map, np.int64)
+            src = nm[src].astype(np.int32)
+            dst = nm[dst].astype(np.int32)
+        start, end = self.start, self.end
+        if shift != 0.0:
+            start, end = start + shift, end + shift
+        return TransferColumns(chunk, link, src, dst, start, end, self.reduce)
+
+    def time_reversed(self, pivot: float) -> "TransferColumns":
+        """The reversed-schedule transform behind Reduce-Scatter synthesis:
+        every transfer flips direction, runs reduce-flagged in the mirrored
+        window ``[pivot - end, pivot - start)``."""
+        return TransferColumns(self.chunk, self.link, self.dst, self.src,
+                               pivot - self.end, pivot - self.start,
+                               np.ones(len(self), np.bool_))
+
+
+class TransferList(Sequence):
+    """Lazy ``Sequence[Transfer]`` view over :class:`TransferColumns`.
+
+    Rows are materialized on access only; iteration materializes in
+    blocks so per-row numpy scalar boxing stays off the hot path. Equality
+    against another view compares the arrays (no objects built at all);
+    equality against a plain list compares element-wise."""
+
+    __slots__ = ("columns",)
+
+    def __init__(self, columns: TransferColumns):
+        self.columns = columns
+
+    def __len__(self) -> int:
+        return len(self.columns)
+
+    def __getitem__(self, i):
+        n = len(self.columns)
+        if isinstance(i, slice):
+            idx = range(*i.indices(n))
+            return [self.columns.row(j) for j in idx]
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError("transfer index out of range")
+        return self.columns.row(i)
+
+    def __iter__(self):
+        c = self.columns
+        n = len(c)
+        for lo in range(0, n, _ITER_BLOCK):
+            hi = min(lo + _ITER_BLOCK, n)
+            yield from map(Transfer,
+                           c.chunk[lo:hi].tolist(), c.link[lo:hi].tolist(),
+                           c.src[lo:hi].tolist(), c.dst[lo:hi].tolist(),
+                           c.start[lo:hi].tolist(), c.end[lo:hi].tolist(),
+                           c.reduce[lo:hi].tolist())
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, TransferList):
+            a, b = self.columns, other.columns
+            return len(a) == len(b) and all(
+                np.array_equal(getattr(a, f), getattr(b, f))
+                for f, _ in _COLUMN_DTYPES)
+        if isinstance(other, (list, tuple)):
+            return len(self) == len(other) and all(
+                x == y for x, y in zip(self, other))
+        return NotImplemented
+
+    def __ne__(self, other) -> bool:
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    __hash__ = None
+
+    def __add__(self, other):
+        return list(self) + list(other)
+
+    def __radd__(self, other):
+        return list(other) + list(self)
+
+    def __repr__(self) -> str:
+        return f"TransferList(n={len(self)})"
+
+
+def _as_columns(transfers) -> TransferColumns:
+    if transfers is None:
+        return TransferColumns.empty()
+    if isinstance(transfers, TransferColumns):
+        return transfers
+    if isinstance(transfers, TransferList):
+        return transfers.columns
+    return TransferColumns.from_transfers(transfers)
+
+
 class CollectiveAlgorithm:
-    """The synthesis result for a set of conditions over a topology."""
+    """The synthesis result for a set of conditions over a topology.
 
-    topology: Topology
-    conditions: list  # list[Condition | ReduceCondition]
-    transfers: list[Transfer] = field(default_factory=list)
-    name: str = "pccl"
-    # Phase provenance for composed algorithms (hierarchical / PhasePlan
-    # synthesis): [(phase name, first start, last end)], in execution order.
-    # Multi-level compositions record sub-phase provenance as nested
-    # "parent/child" names (e.g. "intra:0/inter" — the pod-boundary phase
-    # inside pod 0's recursive plan), whose windows lie inside the parent's.
-    # Purely descriptive — validation and replay never consult it.
-    phase_spans: list = field(default_factory=list)
+    ``transfers`` accepts a list of :class:`Transfer`, a
+    :class:`TransferColumns`, or another algorithm's :class:`TransferList`;
+    it is stored columnar (``self.columns``) in canonical schedule order
+    and exposed back through the lazy ``transfers`` view.
+    """
 
-    def __post_init__(self):
-        ts = self.transfers
-        if len(ts) >= _VECTOR_SORT_MIN:
-            # same stable (start, chunk, link) order, bulk-keyed: million-
-            # transfer composed schedules sort in C instead of via
-            # attrgetter tuples
-            start = np.fromiter((t.start for t in ts), dtype=float,
-                                count=len(ts))
-            chunk = np.fromiter((t.chunk for t in ts), dtype=np.int64,
-                                count=len(ts))
-            link = np.fromiter((t.link for t in ts), dtype=np.int64,
-                               count=len(ts))
-            order = np.lexsort((link, chunk, start))
-            self.transfers = [ts[i] for i in order]
-        else:
-            self.transfers = sorted(
-                ts, key=operator.attrgetter("start", "chunk", "link")
-            )
+    __slots__ = ("topology", "conditions", "columns", "name", "phase_spans")
+
+    def __init__(self, topology: Topology, conditions: list, transfers=None,
+                 name: str = "pccl", phase_spans: list | None = None):
+        self.topology = topology
+        self.conditions = list(conditions)
+        self.name = name
+        # Phase provenance for composed algorithms (hierarchical / PhasePlan
+        # synthesis): [(phase name, first start, last end)], in execution
+        # order. Multi-level compositions record sub-phase provenance as
+        # nested "parent/child" names (e.g. "intra:0/inter" — the
+        # pod-boundary phase inside pod 0's recursive plan), whose windows
+        # lie inside the parent's. Purely descriptive — validation and
+        # replay never consult it.
+        self.phase_spans = list(phase_spans) if phase_spans else []
+        self.columns = _as_columns(transfers).sorted_schedule()
+
+    @property
+    def transfers(self) -> TransferList:
+        return TransferList(self.columns)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, CollectiveAlgorithm):
+            return NotImplemented
+        return (self.topology == other.topology
+                and self.conditions == other.conditions
+                and self.transfers == other.transfers
+                and self.name == other.name
+                and self.phase_spans == other.phase_spans)
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return (f"CollectiveAlgorithm(name={self.name!r}, "
+                f"conditions={len(self.conditions)}, "
+                f"transfers={len(self.columns)})")
 
     def top_phase_spans(self) -> list:
         """Top-level ``phase_spans`` entries only — nested sub-phase
@@ -96,24 +352,39 @@ class CollectiveAlgorithm:
 
     @property
     def makespan(self) -> float:
-        if not self.transfers:
+        if not len(self.columns):
             return 0.0
         release = min((c.release for c in self.conditions), default=0.0)
-        return max(t.end for t in self.transfers) - release
+        return float(self.columns.end.max()) - release
 
     @property
     def num_transfers(self) -> int:
-        return len(self.transfers)
+        return len(self.columns)
+
+    @property
+    def plan_nbytes(self) -> int:
+        """In-memory footprint of the columnar schedule."""
+        return self.columns.nbytes
 
     def total_bytes_moved(self) -> float:
+        cols = self.columns
+        if not len(cols):
+            return 0.0
         sizes = {c.chunk: c.bytes for c in self.conditions}
-        return sum(sizes[t.chunk] for t in self.transfers)
+        ck = np.fromiter(sizes.keys(), np.int64, len(sizes))
+        cb = np.fromiter(sizes.values(), np.float64, len(sizes))
+        order = np.argsort(ck)
+        ck, cb = ck[order], cb[order]
+        return float(cb[np.searchsorted(ck, cols.chunk)].sum())
 
     def link_busy_time(self) -> dict[int, float]:
-        busy: dict[int, float] = defaultdict(float)
-        for t in self.transfers:
-            busy[t.link] += t.end - t.start
-        return dict(busy)
+        cols = self.columns
+        if not len(cols):
+            return {}
+        busy = np.zeros(self.topology.num_links, np.float64)
+        np.add.at(busy, cols.link, cols.end - cols.start)
+        present = np.unique(cols.link)
+        return dict(zip(present.tolist(), busy[present].tolist()))
 
     def link_utilization(self) -> dict[int, float]:
         span = self.makespan or 1.0
@@ -137,7 +408,7 @@ class CollectiveAlgorithm:
         if mode == "oracle":
             return self._validate_oracle()
         eligible = (
-            len(self.transfers) >= _VECTOR_SORT_MIN or mode == "bulk"
+            len(self.columns) >= _VECTOR_SORT_MIN or mode == "bulk"
         ) and self._bulk_validatable()
         if mode == "bulk" and not eligible:
             raise ValueError(
@@ -158,9 +429,17 @@ class CollectiveAlgorithm:
         # reduce transfers must ride reduction chunks — a reduce-flagged
         # copy of a plain chunk is a nonstandard schedule the oracle judges
         # with its full replay, so keep it there
-        rchunks = {c.chunk for c in self.conditions
-                   if type(c) is ReduceCondition}
-        return all(t.chunk in rchunks for t in self.transfers if t.reduce)
+        cols = self.columns
+        if not cols.reduce.any():
+            return True
+        rchunks = sorted(c.chunk for c in self.conditions
+                         if type(c) is ReduceCondition)
+        if not rchunks:
+            return False
+        rarr = np.asarray(rchunks, np.int64)
+        rc = cols.chunk[cols.reduce]
+        loc = np.minimum(np.searchsorted(rarr, rc), len(rarr) - 1)
+        return bool((rarr[loc] == rc).all())
 
     def _validate_bulk(self) -> None:
         """Vectorized validation for schedules on unconstrained fabrics.
@@ -186,14 +465,11 @@ class CollectiveAlgorithm:
         topo = self.topology
         ts = self.transfers
         conds = self.conditions
-        n = len(ts)
-        chunk = np.fromiter((t.chunk for t in ts), np.int64, n)
-        link = np.fromiter((t.link for t in ts), np.int64, n)
-        src = np.fromiter((t.src for t in ts), np.int64, n)
-        dst = np.fromiter((t.dst for t in ts), np.int64, n)
-        start = np.fromiter((t.start for t in ts), float, n)
-        end = np.fromiter((t.end for t in ts), float, n)
-        red = np.fromiter((t.reduce for t in ts), bool, n)
+        cols = self.columns
+        n = len(cols)
+        chunk, link = cols.chunk, cols.link
+        src, dst = cols.src, cols.dst
+        start, end, red = cols.start, cols.end, cols.reduce
 
         if n and (link.min() < 0 or link.max() >= topo.num_links):
             raise AssertionError("transfer references unknown link")

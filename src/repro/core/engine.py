@@ -26,7 +26,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import conditions as cnd
-from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.algorithm import (CollectiveAlgorithm, Transfer,
+                                  TransferColumns)
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.pathfinding import PathResult, bfs_cont, bfs_int
 from repro.core.registry import renumber_chunks
@@ -106,13 +107,10 @@ def time_reversed(
     parents adjacent to their children even though a parent's window
     contains its children's.
     """
-    T = max((t.end for t in alg.transfers), default=0.0)
+    cols = alg.columns
+    T = float(cols.end.max()) if len(cols) else 0.0
     base = min((c.release for c in reduce_conds), default=0.0)
-    rev = [
-        Transfer(t.chunk, t.link, t.dst, t.src, base + T - t.end,
-                 base + T - t.start, reduce=True)
-        for t in alg.transfers
-    ]
+    rev = cols.time_reversed(base + T)
     spans = sorted(
         ((ph, base + T - hi, base + T - lo)
          for ph, lo, hi in alg.phase_spans),
@@ -393,10 +391,11 @@ class SynthesisEngine:
             mode == "auto" and self._use_int_mode(conds, topo)
         )
         if preload is not None:
-            for t in preload.transfers:
-                if int_mode:
-                    ten.commit_int(t.link, int(t.start))
-                else:
+            if int_mode:
+                pc = preload.columns
+                ten.commit_int_cols(pc.link, pc.start)
+            else:
+                for t in preload.transfers:
                     ten.commit(t.link, t.start, t.end)
 
         repl = replicate and int_mode and self._replication_safe(topo)
@@ -548,7 +547,7 @@ class SynthesisEngine:
         local_algs: dict[str, CollectiveAlgorithm] = {}
         shifts: dict[str, float] = {}
         topos: dict[str, Topology] = {}
-        merged: list[Transfer] = []
+        merged: list[TransferColumns] = []
         spans: list[tuple[str, float, float]] = []
         for ph in plan.phases:
             if ph.name in ends:
@@ -582,7 +581,7 @@ class SynthesisEngine:
                     ]
                 preload = None
                 if ph.preload_from:
-                    pre: list[Transfer] = []
+                    pre: list[TransferColumns] = []
                     for dep in ph.preload_from:
                         if dep not in local_algs:
                             raise ValueError(
@@ -596,17 +595,11 @@ class SynthesisEngine:
                             )
                         # occupy the dependency's *effective* window: its
                         # local transfers plus whatever floor shifted it
-                        ds = shifts[dep]
-                        if ds == 0.0:
-                            pre.extend(local_algs[dep].transfers)
-                        else:
-                            pre.extend(
-                                replace(t, start=t.start + ds,
-                                        end=t.end + ds)
-                                for t in local_algs[dep].transfers
-                            )
-                    preload = CollectiveAlgorithm(topo, [], pre,
-                                                  name="preload")
+                        pre.append(
+                            local_algs[dep].columns.shifted(shifts[dep]))
+                    preload = CollectiveAlgorithm(
+                        topo, [], TransferColumns.concat(pre),
+                        name="preload")
                 alg = self.synthesize(
                     conds, preload=preload, mode=ph.mode,
                     name=f"{plan.name}/{ph.name}", topology=topo,
@@ -615,10 +608,13 @@ class SynthesisEngine:
             local_algs[ph.name] = alg
             shifts[ph.name] = shift
             topos[ph.name] = topo
-            lifted = self._lift(alg.transfers, ph, topo, shift)
-            merged.extend(lifted)
-            t_lo = min((t.start for t in lifted), default=floor)
-            t_hi = max((t.end for t in lifted), default=floor)
+            lifted = self._lift(alg.columns, ph, topo, shift)
+            merged.append(lifted)
+            if len(lifted):
+                t_lo = float(lifted.start.min())
+                t_hi = float(lifted.end.max())
+            else:
+                t_lo = t_hi = floor
             ends[ph.name] = max(t_hi, floor)
             spans.append((ph.name, t_lo, t_hi))
             # multi-level composition: a phase that is itself a composed
@@ -628,14 +624,16 @@ class SynthesisEngine:
             for child, lo, hi in alg.phase_spans:
                 spans.append((f"{ph.name}/{child}", lo + shift, hi + shift))
         return CollectiveAlgorithm(
-            self.topology, list(plan.conditions), merged, name=plan.name,
+            self.topology, list(plan.conditions),
+            TransferColumns.concat(merged), name=plan.name,
             phase_spans=spans,
         )
 
-    def _lift(self, transfers: list[Transfer], ph: PhaseSpec,
-              topo: Topology, shift: float = 0.0) -> list[Transfer]:
-        """Translate one phase's transfers into global coordinates, shifted
-        ``shift`` later (phases given as canonical pre-timed algorithms)."""
+    def _lift(self, cols: TransferColumns, ph: PhaseSpec,
+              topo: Topology, shift: float = 0.0) -> TransferColumns:
+        """Translate one phase's transfer columns into global coordinates,
+        shifted ``shift`` later (phases given as canonical pre-timed
+        algorithms)."""
         cm = ph.chunk_map or {}
         if topo is self.topology:
             if ph.node_map is not None or ph.link_map is not None:
@@ -644,23 +642,15 @@ class SynthesisEngine:
                     f"sub-topology phases"
                 )
             if not cm and shift == 0.0:
-                return list(transfers)
-            return [
-                replace(t, chunk=cm.get(t.chunk, t.chunk),
-                        start=t.start + shift, end=t.end + shift)
-                for t in transfers
-            ]
+                return cols
+            return cols.relabeled(chunk_map=cm, shift=shift)
         if ph.node_map is None or ph.link_map is None:
             raise ValueError(
                 f"phase {ph.name!r}: sub-topology phases need node_map and "
                 f"link_map to lift into {self.topology.name}"
             )
-        nm, lm = ph.node_map, ph.link_map
-        return [
-            Transfer(cm.get(t.chunk, t.chunk), lm[t.link], nm[t.src],
-                     nm[t.dst], t.start + shift, t.end + shift, t.reduce)
-            for t in transfers
-        ]
+        return cols.relabeled(node_map=ph.node_map, link_map=ph.link_map,
+                              chunk_map=cm, shift=shift)
 
     # -- registry routing ---------------------------------------------------
 
@@ -912,8 +902,13 @@ class SynthesisEngine:
         # per-chunk completion time of the reduce-scatter phase
         owner = {c.chunk: next(iter(c.dests)) for c in rs.conditions}
         done: dict[int, float] = {c.chunk: 0.0 for c in rs.conditions}
-        for t in rs.transfers:
-            done[t.chunk] = max(done[t.chunk], t.end)
+        cols = rs.columns
+        if len(cols):
+            uc, inv = np.unique(cols.chunk, return_inverse=True)
+            dmax = np.full(len(uc), -np.inf)
+            np.maximum.at(dmax, inv, cols.end)
+            for ck, d in zip(uc.tolist(), dmax.tolist()):
+                done[ck] = max(done[ck], d)
         rs_makespan = max(done.values(), default=0.0)
 
         ag_conds = [

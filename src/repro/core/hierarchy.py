@@ -64,7 +64,7 @@ from dataclasses import dataclass, replace
 import numpy as np
 
 from repro.core import conditions as cnd
-from repro.core.algorithm import CollectiveAlgorithm
+from repro.core.algorithm import CollectiveAlgorithm, remap_ids
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine, \
     time_reversed
@@ -123,13 +123,31 @@ def _signature(conds: list[Condition]) -> str:
 
 def _arrivals(transfers) -> dict[tuple[int, int], float]:
     """(chunk, node) -> earliest arrival end time."""
-    arr: dict[tuple[int, int], float] = {}
-    for t in transfers:
-        key = (t.chunk, t.dst)
-        got = arr.get(key)
-        if got is None or t.end < got:
-            arr[key] = t.end
-    return arr
+    cols = getattr(transfers, "columns", None)
+    if cols is None:  # plain iterable of Transfer objects
+        arr: dict[tuple[int, int], float] = {}
+        for t in transfers:
+            key = (t.chunk, t.dst)
+            got = arr.get(key)
+            if got is None or t.end < got:
+                arr[key] = t.end
+        return arr
+    if not len(cols):
+        return {}
+    uk, amin = _min_by_key(cols.chunk, cols.dst, cols.end)
+    return {(int(k >> 32), int(k & 0xFFFFFFFF)): e
+            for k, e in zip(uk.tolist(), amin.tolist())}
+
+
+def _min_by_key(chunk: np.ndarray, node: np.ndarray,
+                end: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Earliest ``end`` per packed (chunk, node) key — the vectorized heart
+    of the per-chunk arrival floors (node ids fit 32 bits by construction)."""
+    key = chunk.astype(np.int64) * (1 << 32) + node.astype(np.int64)
+    uk, inv = np.unique(key, return_inverse=True)
+    amin = np.full(len(uk), np.inf)
+    np.minimum.at(amin, inv, end)
+    return uk, amin
 
 
 def _canonicalize_phase(conds: list[Condition]) -> tuple[list[Condition],
@@ -1039,12 +1057,12 @@ class HierarchicalSynthesizer:
         for the supported fabric families; on an exotic partition where a
         boundary route threads a second gateway of some pod, fail over to
         flat synthesis instead of emitting an invalid plan."""
-        n = len(alg.transfers)
+        cols = alg.columns
+        n = len(cols)
         if not n:
             return
         nn = alg.topology.num_nodes
-        keys = np.fromiter(
-            (t.chunk * nn + t.src for t in alg.transfers), np.int64, n)
+        keys = cols.chunk * nn + cols.src
         if len(np.unique(keys)) != n:
             raise HierarchyError(
                 "reversed composition is not an in-forest (some device "
@@ -1168,11 +1186,16 @@ class HierarchicalSynthesizer:
             for p in involved:
                 ctx = self._pod(p)
                 cm = intra_maps[p]
-                nm = ctx.view.nodes
-                for t in intra_local[p].transfers:
-                    key = (cm[t.chunk], nm[t.dst])
-                    if key not in arr or t.end < arr[key]:
-                        arr[key] = t.end
+                nm = np.asarray(ctx.view.nodes, np.int64)
+                cols = intra_local[p].columns
+                if not len(cols):
+                    continue
+                uk, amin = _min_by_key(
+                    remap_ids(cols.chunk, cm), nm[cols.dst], cols.end)
+                for k, e in zip(uk.tolist(), amin.tolist()):
+                    key = (int(k >> 32), int(k & 0xFFFFFFFF))
+                    if key not in arr or e < arr[key]:
+                        arr[key] = e
             rel_conds = []
             for c in b_conds:
                 g = b_chunk_map[c.chunk]

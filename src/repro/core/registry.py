@@ -18,20 +18,27 @@ canonicalized, cached artifacts:
   through the inverse automorphism (nodes, link ids, and chunk ids), which is
   O(transfers) instead of O(BFS * conditions). Relabeled algorithms have the
   same makespan and pass the full validation oracle.
-* **Persistence** — in-memory LRU, plus optional on-disk JSON (the
-  ``to_msccl_json`` schema + the inverse loader in ``core.translate``) so a
-  pod restart reuses plans synthesized by a previous job.
+* **Persistence** — in-memory LRU, plus optional on-disk binary plans
+  (uncompressed ``.npz``, mmap-loaded zero-copy by ``core.serialize``) so a
+  pod restart reuses plans synthesized by a previous job. Legacy ``.json``
+  entries (the ``to_msccl_json`` schema) are still read and migrated to npz
+  in place. Writes are atomic (tmp file + rename), so any number of
+  registries — across threads *and* processes — can share one
+  ``PCCL_CACHE_DIR``: readers only ever see complete entries, and a stale
+  or corrupt entry is dropped and resynthesized.
 """
 
 from __future__ import annotations
 
 import hashlib
 import os
+import threading
 from collections import Counter, OrderedDict
 from dataclasses import dataclass, replace
 from typing import Callable, Sequence
 
-from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.algorithm import (CollectiveAlgorithm, TransferColumns,
+                                  remap_ids)
 from repro.core.conditions import ChunkIds, ReduceCondition
 from repro.topology.topology import Topology
 
@@ -209,12 +216,9 @@ def relabel_algorithm(
                 c, chunk=ch(c.chunk), src=node_map[c.src],
                 dests=frozenset(node_map[d] for d in c.dests),
             ))
-    transfers = [
-        Transfer(ch(t.chunk), links[t.link], node_map[t.src], node_map[t.dst],
-                 t.start, t.end, t.reduce)
-        for t in alg.transfers
-    ]
-    return CollectiveAlgorithm(topo, conds, transfers, name=alg.name,
+    cols = alg.columns.relabeled(node_map=node_map, link_map=links,
+                                 chunk_map=cm)
+    return CollectiveAlgorithm(topo, conds, cols, name=alg.name,
                                phase_spans=list(alg.phase_spans))
 
 
@@ -229,8 +233,10 @@ def renumber_chunks(
     if all(k == v for k, v in mapping.items()):
         return alg
     conds = [replace(c, chunk=mapping[c.chunk]) for c in alg.conditions]
-    transfers = [replace(t, chunk=mapping[t.chunk]) for t in alg.transfers]
-    return CollectiveAlgorithm(alg.topology, conds, transfers, name=alg.name,
+    c = alg.columns
+    cols = TransferColumns(remap_ids(c.chunk, mapping), c.link, c.src,
+                           c.dst, c.start, c.end, c.reduce)
+    return CollectiveAlgorithm(alg.topology, conds, cols, name=alg.name,
                                phase_spans=list(alg.phase_spans))
 
 
@@ -244,10 +250,14 @@ class RegistryStats:
     misses: int = 0
     disk_hits: int = 0
     evictions: int = 0
+    bytes_loaded: int = 0  # on-disk bytes of entries served from the cache dir
+    bytes_stored: int = 0  # on-disk bytes written for fresh syntheses
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "disk_hits": self.disk_hits, "evictions": self.evictions}
+                "disk_hits": self.disk_hits, "evictions": self.evictions,
+                "bytes_loaded": self.bytes_loaded,
+                "bytes_stored": self.bytes_stored}
 
 
 class AlgorithmRegistry:
@@ -256,8 +266,10 @@ class AlgorithmRegistry:
     ``get_or_synthesize`` is the single entry point: it canonicalizes the
     process group, consults memory then disk, synthesizes on the canonical
     labels only on a true miss, and relabels the result back to the caller's
-    group. Thread-compat note: lookups mutate LRU order; guard externally if
-    shared across threads.
+    group. Lookups are serialized on an internal lock, so one registry can
+    be shared across threads (the plan service's ``warm()`` workers rely on
+    this); the on-disk side is safe across *processes* as well — writes are
+    atomic renames, and corrupt/partial entries are dropped + resynthesized.
     """
 
     def __init__(self, max_entries: int = 256, cache_dir: str | None = None):
@@ -265,13 +277,16 @@ class AlgorithmRegistry:
         self.cache_dir = cache_dir
         self.stats = RegistryStats()
         self._lru: OrderedDict[tuple, CollectiveAlgorithm] = OrderedDict()
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._lru)
+        with self._lock:
+            return len(self._lru)
 
     def clear(self) -> None:
-        self._lru.clear()
-        self.stats = RegistryStats()
+        with self._lock:
+            self._lru.clear()
+            self.stats = RegistryStats()
 
     # -- key construction ---------------------------------------------------
 
@@ -296,40 +311,82 @@ class AlgorithmRegistry:
         if self.cache_dir is None:
             return None
         stem = hashlib.sha256(repr(key).encode()).hexdigest()
-        return os.path.join(self.cache_dir, f"{stem}.json")
+        return os.path.join(self.cache_dir, f"{stem}.npz")
 
     def _load_disk(self, key: tuple, topo: Topology) -> CollectiveAlgorithm | None:
         path = self._disk_path(key)
-        if path is None or not os.path.exists(path):
+        if path is None:
+            return None
+        if os.path.exists(path):
+            from repro.core.serialize import load_plan_npz
+
+            try:
+                nbytes = os.path.getsize(path)
+                alg = load_plan_npz(path, topo)
+                self.stats.bytes_loaded += nbytes
+                return alg
+            except (OSError, ValueError, KeyError, TypeError, AttributeError,
+                    IndexError):
+                # Corrupt, truncated, or wrong-shape entry (a half-written
+                # file from a killed process, bit rot, a hand-edited file):
+                # never fail the lookup — drop the bad entry so the fresh
+                # plan replaces it, and resynthesize.
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+                return None
+        return self._load_legacy_json(key, topo)
+
+    def _load_legacy_json(self, key: tuple,
+                          topo: Topology) -> CollectiveAlgorithm | None:
+        """Back-compat import of a pre-npz ``.json`` entry; on success the
+        plan is re-stored as npz and the JSON file retired (one-way
+        migration)."""
+        path = self._disk_path(key)
+        jpath = path[:-len(".npz")] + ".json" if path else None
+        if jpath is None or not os.path.exists(jpath):
             return None
         from repro.core.translate import from_msccl_json
 
         try:
-            with open(path, encoding="utf-8") as f:
-                return from_msccl_json(f.read(), topo)
+            nbytes = os.path.getsize(jpath)
+            with open(jpath, encoding="utf-8") as f:
+                alg = from_msccl_json(f.read(), topo)
+            self.stats.bytes_loaded += nbytes
         except (OSError, ValueError, KeyError, TypeError, AttributeError,
                 IndexError):
-            # Corrupt, truncated, or wrong-shape document (a half-written
-            # file from a killed process, a stale schema, hand-edited JSON):
-            # never fail the lookup — drop the bad entry so the fresh plan
-            # replaces it, and resynthesize.
             try:
-                os.remove(path)
+                os.remove(jpath)
             except OSError:
                 pass
             return None
+        self._store_disk(key, alg)
+        try:
+            os.remove(jpath)
+        except OSError:
+            pass
+        return alg
 
     def _store_disk(self, key: tuple, alg: CollectiveAlgorithm) -> None:
         path = self._disk_path(key)
         if path is None:
             return
-        from repro.core.translate import to_msccl_json
+        from repro.core.serialize import save_plan_npz
 
         os.makedirs(self.cache_dir, exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w", encoding="utf-8") as f:
-            f.write(to_msccl_json(alg))
-        os.replace(tmp, path)
+        try:
+            save_plan_npz(tmp, alg, key[1])
+            os.replace(tmp, path)
+        except OSError:
+            # disk-full / permission trouble degrades to a memory-only cache
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            return
+        self.stats.bytes_stored += os.path.getsize(path)
 
     # -- main entry ---------------------------------------------------------
 
@@ -351,22 +408,23 @@ class AlgorithmRegistry:
         canon, perm = canonicalize_group(topo, group)
         key = self._key(topo, kind, canon, params)
 
-        alg = self._lru.get(key)
-        if alg is not None:
-            self._lru.move_to_end(key)
-            self.stats.hits += 1
-        else:
-            alg = self._load_disk(key, topo)
+        with self._lock:
+            alg = self._lru.get(key)
             if alg is not None:
-                self.stats.disk_hits += 1
+                self._lru.move_to_end(key)
+                self.stats.hits += 1
             else:
-                alg = synth(list(canon))
-                self.stats.misses += 1
-                self._store_disk(key, alg)
-            self._lru[key] = alg
-            while len(self._lru) > self.max_entries:
-                self._lru.popitem(last=False)
-                self.stats.evictions += 1
+                alg = self._load_disk(key, topo)
+                if alg is not None:
+                    self.stats.disk_hits += 1
+                else:
+                    alg = synth(list(canon))
+                    self.stats.misses += 1
+                    self._store_disk(key, alg)
+                self._lru[key] = alg
+                while len(self._lru) > self.max_entries:
+                    self._lru.popitem(last=False)
+                    self.stats.evictions += 1
 
         if canon != tuple(group):
             alg = relabel_algorithm(alg, invert_permutation(perm))
@@ -374,6 +432,7 @@ class AlgorithmRegistry:
 
 
 _DEFAULT_REGISTRY: AlgorithmRegistry | None = None
+_DEFAULT_REGISTRY_LOCK = threading.Lock()
 
 
 def default_registry() -> AlgorithmRegistry:
@@ -382,8 +441,9 @@ def default_registry() -> AlgorithmRegistry:
     Set ``PCCL_CACHE_DIR`` to persist synthesized algorithms across runs.
     """
     global _DEFAULT_REGISTRY
-    if _DEFAULT_REGISTRY is None:
-        _DEFAULT_REGISTRY = AlgorithmRegistry(
-            cache_dir=os.environ.get("PCCL_CACHE_DIR") or None
-        )
-    return _DEFAULT_REGISTRY
+    with _DEFAULT_REGISTRY_LOCK:
+        if _DEFAULT_REGISTRY is None:
+            _DEFAULT_REGISTRY = AlgorithmRegistry(
+                cache_dir=os.environ.get("PCCL_CACHE_DIR") or None
+            )
+        return _DEFAULT_REGISTRY

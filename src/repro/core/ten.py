@@ -156,6 +156,40 @@ class TEN:
                 hi = float(t + 1)
         self._horizon = hi
 
+    def commit_int_cols(self, links: np.ndarray, starts: np.ndarray) -> None:
+        """Columnar bulk commit: one vectorized pass for a whole preloaded
+        schedule (phase composition commits millions of transfers here).
+        ``starts`` are float timestamps on integer boundaries."""
+        if not len(links):
+            return
+        t = starts.astype(np.int64)
+        tmax = int(t.max())
+        if tmax >= self._cap:
+            self._grow(tmax)
+        if self._bits[links, t].any():
+            k = int(np.nonzero(self._bits[links, t])[0][0])
+            raise AssertionError(
+                f"link {links[k]}: timestep {int(t[k])} already occupied")
+        # duplicates inside the batch would silently collapse under fancy
+        # assignment — detect them the same way a serial commit would
+        key = links.astype(np.int64) * (self._cap + 1) + t
+        if len(np.unique(key)) != len(key):
+            dup = np.sort(key)
+            k = int(np.nonzero(dup[1:] == dup[:-1])[0][0])
+            raise AssertionError(
+                f"link {int(dup[k] // (self._cap + 1))}: timestep "
+                f"{int(dup[k] % (self._cap + 1))} already occupied")
+        self._bits[links, t] = True
+        # rebuild the scalar mirrors only for the touched links
+        for link in np.unique(links).tolist():
+            m = int.from_bytes(
+                np.packbits(self._bits[link], bitorder="little").tobytes(),
+                "little")
+            self._masks[link] = m
+            self._mask_bl[link] = m.bit_length()
+        if tmax + 1 > self._horizon:
+            self._horizon = float(tmax + 1)
+
     def _grow(self, t: int) -> None:
         new_cap = max(self._cap * 2, t + 1)
         bits = np.zeros((self.topology.num_links, new_cap), dtype=bool)

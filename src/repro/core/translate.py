@@ -17,7 +17,9 @@ import json
 from collections import defaultdict
 from dataclasses import dataclass, field
 
-from repro.core.algorithm import CollectiveAlgorithm, Transfer
+import numpy as np
+
+from repro.core.algorithm import CollectiveAlgorithm, Transfer, TransferColumns
 from repro.core.conditions import Condition, ReduceCondition
 
 
@@ -112,15 +114,20 @@ def to_msccl_json(alg: CollectiveAlgorithm) -> str:
     document round-trips through :func:`from_msccl_json` — this is the
     on-disk format of the algorithm registry."""
     ops_by_npu: dict[int, list[dict]] = defaultdict(list)
-    for i, t in enumerate(alg.transfers):
-        ops_by_npu[t.src].append(
-            {"op": "send", "chunk": t.chunk, "peer": t.dst, "t_start": t.start,
-             "t_end": t.end, "link": t.link, "idx": i, "reduce": t.reduce}
+    # one tolist() per column: native scalars without per-row Transfer views
+    cols = alg.columns
+    rows = zip(cols.chunk.tolist(), cols.link.tolist(), cols.src.tolist(),
+               cols.dst.tolist(), cols.start.tolist(), cols.end.tolist(),
+               cols.reduce.tolist())
+    for i, (chunk, link, src, dst, start, end, red) in enumerate(rows):
+        ops_by_npu[src].append(
+            {"op": "send", "chunk": chunk, "peer": dst, "t_start": start,
+             "t_end": end, "link": link, "idx": i, "reduce": red}
         )
-        kind = "recv_reduce" if t.reduce else "recv"
-        ops_by_npu[t.dst].append(
-            {"op": kind, "chunk": t.chunk, "peer": t.src, "t_start": t.start,
-             "t_end": t.end, "link": t.link, "idx": i, "reduce": t.reduce}
+        kind = "recv_reduce" if red else "recv"
+        ops_by_npu[dst].append(
+            {"op": kind, "chunk": chunk, "peer": src, "t_start": start,
+             "t_end": end, "link": link, "idx": i, "reduce": red}
         )
     conditions = []
     for c in alg.conditions:
@@ -169,22 +176,50 @@ def from_msccl_json(doc: str | dict, topology) -> CollectiveAlgorithm:
         op["idx"] for gpu in doc["gpus"] for op in gpu["ops"]
         if op["op"] == "recv_reduce"
     }
-    transfers: list[Transfer] = []
+    # gather send ops into parallel lists, then validate link ids and
+    # endpoints in two vectorized sweeps instead of per-op topology lookups
+    chunk: list[int] = []
+    link: list[int] = []
+    src: list[int] = []
+    dst: list[int] = []
+    start: list[float] = []
+    end: list[float] = []
+    red: list[bool] = []
     for gpu in doc["gpus"]:
+        gid = gpu["id"]
         for op in gpu["ops"]:
             if op["op"] != "send":
                 continue
-            link_id = op["link"]
-            if not 0 <= link_id < topology.num_links:
-                raise ValueError(f"op references unknown link {link_id}")
-            link = topology.links[link_id]
-            if (link.src, link.dst) != (gpu["id"], op["peer"]):
-                raise ValueError(
-                    f"link {link_id} endpoints do not match op "
-                    f"{gpu['id']}->{op['peer']}: topology mismatch")
-            transfers.append(Transfer(
-                op["chunk"], link_id, gpu["id"], op["peer"],
-                op["t_start"], op["t_end"],
-                reduce=op.get("reduce", op["idx"] in reduce_idx)))
-    return CollectiveAlgorithm(topology, conds, transfers,
+            chunk.append(op["chunk"])
+            link.append(op["link"])
+            src.append(gid)
+            dst.append(op["peer"])
+            start.append(op["t_start"])
+            end.append(op["t_end"])
+            red.append(op.get("reduce", op["idx"] in reduce_idx))
+    la = np.asarray(link, np.int64)
+    sa = np.asarray(src, np.int64)
+    da = np.asarray(dst, np.int64)
+    nl = topology.num_links
+    out_of_range = (la < 0) | (la >= nl)
+    safe = np.where(out_of_range, 0, la)
+    lsrc = np.fromiter((l.src for l in topology.links), np.int64, nl)
+    ldst = np.fromiter((l.dst for l in topology.links), np.int64, nl)
+    mismatch = ~out_of_range & ((lsrc[safe] != sa) | (ldst[safe] != da)) \
+        if nl else out_of_range & False
+    bad = out_of_range | mismatch
+    if bad.any():
+        # report the first offending op, matching the serial scan's order
+        k = int(np.argmax(bad))
+        if out_of_range[k]:
+            raise ValueError(f"op references unknown link {link[k]}")
+        raise ValueError(
+            f"link {link[k]} endpoints do not match op "
+            f"{src[k]}->{dst[k]}: topology mismatch")
+    cols = TransferColumns(
+        np.asarray(chunk, np.int64), la.astype(np.int32),
+        sa.astype(np.int32), da.astype(np.int32),
+        np.asarray(start, np.float64), np.asarray(end, np.float64),
+        np.asarray(red, np.bool_))
+    return CollectiveAlgorithm(topology, conds, cols,
                                name=doc.get("name", "pccl"))

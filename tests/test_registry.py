@@ -2,6 +2,7 @@
 automorphism canonicalization, cache-hit relabeling, disk persistence, the
 comms plan cache, and the launch-layer mesh planner."""
 
+import numpy as np
 import pytest
 
 from repro.core import (
@@ -26,6 +27,42 @@ from repro.topology import hypercube, mesh2d, ring, torus2d
 
 def torus_rows(rows, cols):
     return [[r * cols + c for c in range(cols)] for r in range(rows)]
+
+
+def _rewrite_npz(path, mutate):
+    """Load an npz entry, apply ``mutate(arrays)``, write it back."""
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    mutate(arrays)
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def _set(key, value):
+    def mutate(arrays):
+        arrays[key] = value
+    return mutate
+
+
+# name -> in-place corruption of an on-disk .npz plan entry
+NPZ_CORRUPTIONS = {
+    "garbage": lambda p: p.write_bytes(b"this is not a zip archive"),
+    "empty": lambda p: p.write_bytes(b""),
+    "truncated": lambda p: p.write_bytes(p.read_bytes()[:73]),
+    "wrong-dtype": lambda p: _rewrite_npz(
+        p, lambda a: a.update(t_start=a["t_start"].astype(np.float32))),
+    "wrong-length": lambda p: _rewrite_npz(
+        p, lambda a: a.update(t_link=a["t_link"][:-1])),
+    "missing-column": lambda p: _rewrite_npz(
+        p, lambda a: a.pop("t_chunk")),
+    "bad-schema": lambda p: _rewrite_npz(
+        p, _set("schema", np.array([999], np.int64))),
+    "foreign-fingerprint": lambda p: _rewrite_npz(
+        p, _set("fingerprint", np.array(["deadbeef"]))),
+    "bad-indptr": lambda p: _rewrite_npz(
+        p, lambda a: a.update(
+            c_dests_indptr=a["c_dests_indptr"][::-1].copy())),
+}
 
 
 class TestAutomorphisms:
@@ -144,30 +181,40 @@ class TestRegistry:
         rows = torus_rows(4, 4)
         reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
         alg1 = SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
-        assert list(tmp_path.glob("*.json"))
+        assert list(tmp_path.glob("*.npz"))
+        assert reg1.stats.bytes_stored > 0
         # fresh registry, same dir: served from disk, no synthesis
         reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
         alg2 = SynthesisEngine(topo, registry=reg2).all_gather(rows[1])
         alg2.validate()
         assert reg2.stats.disk_hits == 1 and reg2.stats.misses == 0
+        assert reg2.stats.bytes_loaded > 0
         assert alg2.makespan == alg1.makespan
 
-    @pytest.mark.parametrize("payload", [
-        "",                                   # empty file
-        "{ not json",                         # syntactically broken
-        "[1, 2, 3]",                          # valid JSON, wrong shape
-        '{"gpus": []}',                       # missing conditions section
-        "null",                               # wrong top-level type
-    ])
-    def test_corrupt_disk_entry_resynthesized(self, tmp_path, payload):
-        """A corrupt/truncated on-disk plan must be skipped (and replaced),
-        never raise out of get_or_synthesize."""
+    def test_disk_roundtrip_is_exact(self, tmp_path):
+        """Disk-served plans are transfer-for-transfer identical to the
+        plan that was stored (fields, order, phase spans)."""
+        topo = torus2d(4, 4)
+        rows = torus_rows(4, 4)
+        reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg1 = SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
+        reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg2 = SynthesisEngine(topo, registry=reg2).all_gather(rows[0])
+        assert list(alg2.transfers) == list(alg1.transfers)
+        assert alg2.conditions == alg1.conditions
+        assert alg2.phase_spans == alg1.phase_spans
+
+    @pytest.mark.parametrize("corrupt", list(NPZ_CORRUPTIONS),
+                             ids=list(NPZ_CORRUPTIONS))
+    def test_corrupt_disk_entry_resynthesized(self, tmp_path, corrupt):
+        """A corrupt/truncated/wrong-dtype/wrong-shape on-disk plan must be
+        skipped (and replaced), never raise out of get_or_synthesize."""
         topo = torus2d(4, 4)
         rows = torus_rows(4, 4)
         reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
         SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
-        (entry,) = tmp_path.glob("*.json")
-        entry.write_text(payload, encoding="utf-8")
+        (entry,) = tmp_path.glob("*.npz")
+        NPZ_CORRUPTIONS[corrupt](entry)
 
         reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
         alg = SynthesisEngine(topo, registry=reg2).all_gather(rows[0])
@@ -183,14 +230,55 @@ class TestRegistry:
         topo = torus2d(4, 4)
         reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
         SynthesisEngine(topo, registry=reg1).all_gather(torus_rows(4, 4)[0])
-        (entry,) = tmp_path.glob("*.json")
-        entry.write_text(entry.read_text(encoding="utf-8")[: 50],
-                         encoding="utf-8")
+        (entry,) = tmp_path.glob("*.npz")
+        entry.write_bytes(entry.read_bytes()[: len(entry.read_bytes()) // 2])
         reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
         alg = SynthesisEngine(topo, registry=reg2).all_gather(
             torus_rows(4, 4)[1])
         alg.validate()
         assert reg2.stats.misses == 1
+
+    def test_legacy_json_entry_migrated_to_npz(self, tmp_path):
+        """Pre-npz .json entries still load, and are migrated in place."""
+        topo = torus2d(4, 4)
+        rows = torus_rows(4, 4)
+        reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        # rows[0] is its own canonical form, so the returned algorithm is
+        # exactly what a legacy registry would have serialized
+        alg = SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
+        (npz,) = tmp_path.glob("*.npz")
+        npz.with_suffix(".json").write_text(to_msccl_json(alg),
+                                            encoding="utf-8")
+        npz.unlink()
+
+        reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg2 = SynthesisEngine(topo, registry=reg2).all_gather(rows[1])
+        alg2.validate()
+        assert reg2.stats.disk_hits == 1 and reg2.stats.misses == 0
+        assert alg2.makespan == alg.makespan
+        # one-way migration: npz rewritten, json retired
+        assert list(tmp_path.glob("*.npz"))
+        assert not list(tmp_path.glob("*.json"))
+        # and the migrated entry serves the next registry
+        reg3 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        SynthesisEngine(topo, registry=reg3).all_gather(rows[0])
+        assert reg3.stats.disk_hits == 1 and reg3.stats.misses == 0
+
+    def test_corrupt_legacy_json_dropped(self, tmp_path):
+        """A broken legacy .json entry is removed and resynthesized."""
+        topo = torus2d(4, 4)
+        rows = torus_rows(4, 4)
+        reg1 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        SynthesisEngine(topo, registry=reg1).all_gather(rows[0])
+        (npz,) = tmp_path.glob("*.npz")
+        npz.with_suffix(".json").write_text("{ not json", encoding="utf-8")
+        npz.unlink()
+
+        reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
+        alg = SynthesisEngine(topo, registry=reg2).all_gather(rows[0])
+        alg.validate()
+        assert reg2.stats.misses == 1
+        assert not list(tmp_path.glob("*.json"))
 
     def test_relabel_preserves_validity_on_reduce(self):
         topo = torus2d(4, 4)
