@@ -92,6 +92,48 @@ def run(full: bool = False) -> list[Row]:
             f"flat_synth_us={flat_us:.0f}",
         ))
 
+    # -- chunk-granular (barrier-free) pipelined All-Reduce ----------------
+    # quick: the flat-feasible 64-NPU fabric, where ratio (pipelined
+    # hierarchical / flat makespan) is the headline (<= 1.05x gate); full:
+    # 512/2048 three-level fabrics, where ratio against the sequential
+    # (barrier) route shows what killing the RS->AG barrier buys at sizes
+    # flat synthesis cannot touch
+    topo = multi_pod(2, 4, 8, unit_links=True)
+    reg = AlgorithmRegistry()
+    eng = SynthesisEngine(topo, registry=reg)
+    pipe, us = timed(eng.hierarchical().all_reduce, topo.npus,
+                     pipeline=True)
+    pipe.validate()
+    flat = eng.all_reduce(topo.npus, hierarchy="never")
+    rows.append(Row(
+        "fig_hier_pipe_ar_64", us,
+        f"npus=64;pods={topo.num_pods};makespan={pipe.makespan};"
+        f"transfers={pipe.num_transfers};flat_makespan={flat.makespan};"
+        f"ratio={pipe.makespan / flat.makespan:.3f};"
+        f"misses={reg.stats.misses};algo={pipe.name}",
+    ))
+    if full:
+        for pods, racks, k in ((8, 8, 8), (16, 16, 8)):
+            topo = three_level(pods, racks, k, unit_links=True)
+            n = pods * racks * k
+            reg = AlgorithmRegistry()
+            eng = SynthesisEngine(topo, registry=reg)
+            pipe, us = timed(eng.hierarchical().all_reduce, topo.npus,
+                             pipeline=True)
+            _, val_us = timed(pipe.validate, "bulk")
+            seq = SynthesisEngine(
+                topo, registry=AlgorithmRegistry()).hierarchical(
+            ).all_reduce(topo.npus, pipeline=False)
+            rows.append(Row(
+                f"fig_hier_pipe_ar_{n}", us,
+                f"npus={n};pods={topo.num_pods};makespan={pipe.makespan};"
+                f"transfers={pipe.num_transfers};"
+                f"seq_makespan={seq.makespan};"
+                f"ratio={pipe.makespan / seq.makespan:.3f};"
+                f"validate_s={val_us / 1e6:.2f};"
+                f"misses={reg.stats.misses};algo={pipe.name}",
+            ))
+
     # -- per-pod plan amortization -----------------------------------------
     pods = 8 if full else 4
     topo = multi_pod(pods, 4, 4, unit_links=True, dci_ports_per_pod=4)

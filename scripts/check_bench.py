@@ -56,7 +56,8 @@ WALL_CLOCK_TOLERANCE = 3.0
 # cold-synthesis families specifically: a loose "fig_hier_" would be
 # satisfied by the fig_hier_vs_flat_*/fig_hier_reuse rows alone.
 REQUIRED_ROW_PREFIXES = ("fig_hier_ag_", "fig_hier_rs_",
-                         "fig_hier3_ag_", "fig_hier3_ar_", "fig_te_",
+                         "fig_hier3_ag_", "fig_hier3_ar_",
+                         "fig_hier_pipe_ar_", "fig_te_",
                          "fig_plan_")
 
 

@@ -56,6 +56,21 @@ class PhaseSpec:
     whose transfers are committed into this phase's TEN before searching, so
     time-overlapping phases stay congestion-free — the mechanism behind
     pipelined All-Reduce and pipelined hierarchical scatter phases.
+
+    Floors come in two granularities. ``after``/``start`` derive one scalar
+    floor for the whole phase (the classic barrier). ``floors_from`` /
+    ``floors`` instead derive a *per-chunk* floor vector: each condition's
+    release is raised to its own chunk's floor — ``floors_from`` names
+    earlier phases whose per-chunk completion times (max transfer end per
+    global chunk id, the packed ``np.unique`` + ``maximum.at`` reduction)
+    become the vector, ``floors`` supplies explicit global-chunk-id ->
+    absolute-time entries. This is what lets a composed All-Reduce release
+    each chunk's gather at that chunk's own reduce completion instead of
+    the phase barrier. Per-chunk floors only ever *raise* releases, and
+    they apply to ``conds`` phases only: a pre-synthesized ``algorithm``
+    is one congestion-free block — shifting its chunks by different
+    amounts could overlap transfers on a shared link, so chunk-granular
+    phases must be (re-)synthesized with the floors in their conditions.
     """
 
     name: str
@@ -70,6 +85,8 @@ class PhaseSpec:
     preload_from: tuple[str, ...] = ()
     mode: str = "auto"
     replicate: bool = False  # enable the path-replication fast path
+    floors_from: tuple[str, ...] = ()  # per-chunk floors: deps' done-times
+    floors: dict[int, float] | None = None  # global chunk -> absolute floor
 
 
 @dataclass
@@ -109,7 +126,12 @@ def time_reversed(
     """
     cols = alg.columns
     T = float(cols.end.max()) if len(cols) else 0.0
-    base = min((c.release for c in reduce_conds), default=0.0)
+    # the reversed schedule starts no earlier than the *latest* release
+    # among the reduce conditions: with uniform releases max == min (the
+    # historical behaviour, byte-identical), while per-chunk heterogeneous
+    # releases (chunk-granular phase floors) need every reversed transfer
+    # to clear every condition's release bound
+    base = max((c.release for c in reduce_conds), default=0.0)
     rev = cols.time_reversed(base + T)
     spans = sorted(
         ((ph, base + T - hi, base + T - lo)
@@ -406,6 +428,7 @@ class SynthesisEngine:
         fast_commit = self._fast_int_commit(topo, int_mode)
         prev_key = None
         prev: PathResult | None = None
+        prev_rel = 0.0
         for c in ordered:
             result: PathResult | None = None
             if repl:
@@ -414,12 +437,22 @@ class SynthesisEngine:
                     result = self._fixed_route_schedule(ten, topo, c,
                                                         next(iter(rd)))
                 else:
-                    key = (c.src, c.dests, c.bytes, c.release)
+                    # release is deliberately NOT part of the run key:
+                    # conditions identical up to their release floor (the
+                    # pipelined regime's arrival-staggered bulk runs) still
+                    # replicate. Identical-release replicas take the
+                    # historical uniform shift; staggered replicas re-time
+                    # the template tree hop by hop, because a uniform
+                    # shift would stall the whole tree on any busy link
+                    key = (c.src, c.dests, c.bytes)
                     if key == prev_key and prev is not None and prev.transfers:
-                        result = self._shift_result(ten, prev, c)
+                        if c.release == prev_rel:
+                            result = self._shift_result(ten, prev, c)
+                        else:
+                            result = self._retime_tree(ten, prev, c)
                     if result is None:
                         result = search(ten, c)
-                    prev_key, prev = key, result
+                    prev_key, prev, prev_rel = key, result, c.release
             else:
                 result = search(ten, c)
             if fast_commit:
@@ -471,16 +504,18 @@ class SynthesisEngine:
     @staticmethod
     def _shift_result(ten: TEN, base: PathResult,
                       c: Condition) -> PathResult | None:
-        """Re-place ``base``'s path for the identical condition ``c`` by a
-        uniform time shift onto free slots.
+        """Re-place ``base``'s path for a condition ``c`` identical up to
+        its release by a uniform time shift onto free slots.
 
         The minimal feasible shift is a fixpoint of per-link next-free-slot
-        queries (each O(1) on the occupancy masks); a uniform shift preserves
-        store-and-forward causality and the release bound, so the result
-        needs no re-validation. Returns None when no fixpoint is found within
-        the iteration budget (the caller falls back to BFS)."""
+        queries (each O(1) on the occupancy masks), floored so the earliest
+        shifted transfer starts no sooner than ``c.release``; a uniform
+        shift preserves store-and-forward causality, so the result needs no
+        re-validation. Returns None when no fixpoint is found within the
+        iteration budget (the caller falls back to BFS)."""
         ts = base.transfers
-        k = 1
+        s_min = min(int(t.start) for t in ts)
+        k = max(1, int(c.release) - s_min)
         for _ in range(64):
             k2 = k
             for t in ts:
@@ -502,6 +537,36 @@ class SynthesisEngine:
         ]
         arrivals = {n: a + kf for n, a in base.arrivals.items()}
         reached = {n: a + kf for n, a in base.reached.items()}
+        return PathResult(transfers, arrivals, reached)
+
+    @staticmethod
+    def _retime_tree(ten: TEN, base: PathResult,
+                     c: Condition) -> PathResult:
+        """Re-place ``base``'s multicast tree for a condition ``c`` that
+        differs only in its release: each hop is re-timed independently to
+        the earliest free slot at or after the chunk's arrival at that
+        hop's source (store-and-forward causality by construction). Unlike
+        a uniform shift, every hop absorbs its own queueing delay, so
+        arrival-staggered bulk runs stay as tight on the template tree as
+        a fresh search would be."""
+        free = ten.earliest_free_int
+        chunk = c.chunk
+        arrivals: dict[int, float] = {c.src: float(int(c.release))}
+        used: dict[int, int] = {}
+        transfers = []
+        for t in sorted(base.transfers, key=lambda t: t.start):
+            s = int(arrivals[t.src])
+            lk = t.link
+            if lk in used and used[lk] >= s:
+                s = used[lk] + 1
+            s = free(lk, s)
+            used[lk] = s
+            transfers.append(Transfer(chunk, lk, t.src, t.dst,
+                                      float(s), float(s + 1)))
+            e = float(s + 1)
+            if t.dst not in arrivals or e < arrivals[t.dst]:
+                arrivals[t.dst] = e
+        reached = {n: arrivals[n] for n in base.reached if n in arrivals}
         return PathResult(transfers, arrivals, reached)
 
     def synthesize_joint(
@@ -547,6 +612,7 @@ class SynthesisEngine:
         local_algs: dict[str, CollectiveAlgorithm] = {}
         shifts: dict[str, float] = {}
         topos: dict[str, Topology] = {}
+        lifted_cols: dict[str, TransferColumns] = {}
         merged: list[TransferColumns] = []
         spans: list[tuple[str, float, float]] = []
         for ph in plan.phases:
@@ -565,8 +631,15 @@ class SynthesisEngine:
                         f"{dep!r}"
                     )
                 floor = max(floor, ends[dep])
+            chunk_floors = self._chunk_floors(ph, lifted_cols)
             shift = 0.0
             if ph.algorithm is not None:
+                if chunk_floors is not None:
+                    raise ValueError(
+                        f"phase {ph.name!r}: per-chunk floors apply to "
+                        f"conds phases only (a pre-timed algorithm cannot "
+                        f"be shifted per chunk without re-synthesis)"
+                    )
                 # Pre-synthesized phases are canonically timed (their clock
                 # starts at 0, which is what makes them cacheable across
                 # isomorphic pods); the floor shifts them into place.
@@ -579,6 +652,17 @@ class SynthesisEngine:
                         c if c.release >= floor else replace(c, release=floor)
                         for c in conds
                     ]
+                if chunk_floors is not None:
+                    # raise-only, per chunk: the phase-local chunk id maps
+                    # through chunk_map into the global id space the floor
+                    # vector is keyed by
+                    cm = ph.chunk_map or {}
+                    out = []
+                    for c in conds:
+                        f = chunk_floors.get(cm.get(c.chunk, c.chunk), 0.0)
+                        out.append(replace(c, release=f)
+                                   if f > c.release else c)
+                    conds = out
                 preload = None
                 if ph.preload_from:
                     pre: list[TransferColumns] = []
@@ -609,6 +693,7 @@ class SynthesisEngine:
             shifts[ph.name] = shift
             topos[ph.name] = topo
             lifted = self._lift(alg.columns, ph, topo, shift)
+            lifted_cols[ph.name] = lifted
             merged.append(lifted)
             if len(lifted):
                 t_lo = float(lifted.start.min())
@@ -628,6 +713,41 @@ class SynthesisEngine:
             TransferColumns.concat(merged), name=plan.name,
             phase_spans=spans,
         )
+
+    @staticmethod
+    def _chunk_floors(
+        ph: PhaseSpec, lifted_cols: dict[str, TransferColumns],
+    ) -> dict[int, float] | None:
+        """The phase's per-chunk floor vector (global chunk id -> absolute
+        release floor), or None when the phase uses scalar floors only.
+
+        ``floors_from`` dependencies contribute their per-chunk completion
+        times — the max transfer end per global chunk over the dependency's
+        *lifted* columns (so sub-topology phases and chunk renumbering are
+        already folded in); explicit ``floors`` entries merge on top.
+        Floors only ever raise releases downstream."""
+        if not ph.floors_from and not ph.floors:
+            return None
+        done: dict[int, float] = {}
+        for dep in ph.floors_from:
+            cols = lifted_cols.get(dep)
+            if cols is None:
+                raise ValueError(
+                    f"phase {ph.name!r} derives floors from unknown/later "
+                    f"phase {dep!r}"
+                )
+            if not len(cols):
+                continue
+            uc, inv = np.unique(cols.chunk, return_inverse=True)
+            dmax = np.full(len(uc), -np.inf)
+            np.maximum.at(dmax, inv, cols.end)
+            for ck, d in zip(uc.tolist(), dmax.tolist()):
+                if d > done.get(ck, 0.0):
+                    done[ck] = d
+        for ck, f in (ph.floors or {}).items():
+            if f > done.get(ck, 0.0):
+                done[ck] = f
+        return done
 
     def _lift(self, cols: TransferColumns, ph: PhaseSpec,
               topo: Topology, shift: float = 0.0) -> TransferColumns:
@@ -899,27 +1019,10 @@ class SynthesisEngine:
         instead of the global makespan; ``preload_from`` keeps the
         overlapping phases congestion-free on the shared links."""
         rs = self._reduce_scatter_impl(group, bytes=bytes)
-        # per-chunk completion time of the reduce-scatter phase
         owner = {c.chunk: next(iter(c.dests)) for c in rs.conditions}
-        done: dict[int, float] = {c.chunk: 0.0 for c in rs.conditions}
-        cols = rs.columns
-        if len(cols):
-            uc, inv = np.unique(cols.chunk, return_inverse=True)
-            dmax = np.full(len(uc), -np.inf)
-            np.maximum.at(dmax, inv, cols.end)
-            for ck, d in zip(uc.tolist(), dmax.tolist()):
-                done[ck] = max(done[ck], d)
-        rs_makespan = max(done.values(), default=0.0)
-
         ag_conds = [
-            Condition(
-                c.chunk,
-                owner[c.chunk],
-                frozenset(group),
-                bytes=bytes,
-                release=(done[c.chunk] if pipelined else rs_makespan),
-                tag="allreduce_ag",
-            )
+            Condition(c.chunk, owner[c.chunk], frozenset(group), bytes=bytes,
+                      tag="allreduce_ag")
             for c in rs.conditions
         ]
         ar_conds = [
@@ -927,11 +1030,17 @@ class SynthesisEngine:
                             bytes=bytes)
             for c in rs.conditions
         ]
+        # pipelined: each chunk's gather releases at its own reduce
+        # completion — the per-chunk floor vector derived from the RS
+        # phase's columns; barrier mode floors the whole phase at RS end
         plan = PhasePlan(
             phases=[
                 PhaseSpec("reduce_scatter", algorithm=rs),
                 PhaseSpec("all_gather", conds=ag_conds,
-                          preload_from=("reduce_scatter",)),
+                          preload_from=("reduce_scatter",),
+                          floors_from=(("reduce_scatter",) if pipelined
+                                       else ()),
+                          after=(() if pipelined else ("reduce_scatter",))),
             ],
             conditions=ar_conds,
             name="pccl_all_reduce",

@@ -64,7 +64,8 @@ from dataclasses import dataclass, replace
 import numpy as np
 
 from repro.core import conditions as cnd
-from repro.core.algorithm import CollectiveAlgorithm, remap_ids
+from repro.core.algorithm import CollectiveAlgorithm, TransferColumns, \
+    remap_ids
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine, \
     time_reversed
@@ -625,9 +626,36 @@ class HierarchicalSynthesizer:
 
     # -- phase synthesis helpers -------------------------------------------
 
+    def _project_preload(
+        self, cols: TransferColumns | None, view: TopologyView,
+    ) -> TransferColumns | None:
+        """Project a full-fabric occupancy schedule into one phase's
+        sub-topology view: keep the transfers riding the view's links,
+        relabeled into local ids. The TEN only consults (link, start, end)
+        when committing occupancy, but endpoints are relabeled too so the
+        block is a well-formed schedule on the sub-topology (a link kept by
+        the view has both endpoints in it by construction)."""
+        if cols is None or not len(cols):
+            return None
+        l2l = np.full(self.topology.num_links, -1, np.int64)
+        l2l[np.asarray(view.links, np.int64)] = np.arange(len(view.links))
+        keep = l2l[cols.link] >= 0
+        if not keep.any():
+            return None
+        n2l = np.full(self.topology.num_nodes, -1, np.int64)
+        n2l[np.asarray(view.nodes, np.int64)] = np.arange(len(view.nodes))
+        return TransferColumns(
+            cols.chunk[keep],
+            l2l[cols.link[keep]].astype(np.int32),
+            n2l[cols.src[keep]].astype(np.int32),
+            n2l[cols.dst[keep]].astype(np.int32),
+            cols.start[keep], cols.end[keep], cols.reduce[keep],
+        )
+
     def _synthesize_local(
         self, sub: Topology, conds: list[Condition], *, kind: str,
         cacheable: bool, replicate: bool = False,
+        preload: TransferColumns | None = None,
     ) -> CollectiveAlgorithm:
         """Synthesize a phase on its (sub-)topology, through the registry
         when one is attached so isomorphic pods (equal sub-topology
@@ -640,30 +668,65 @@ class HierarchicalSynthesizer:
         used in the sequential (scale) regime, where phase traffic is bulk
         runs of identical conditions and schedule tightness is already
         bounded by the phase barriers; the pipelined regime keeps the full
-        per-chunk search for the tightest makespans."""
+        per-chunk search for the tightest makespans.
+
+        ``preload`` is pre-existing link occupancy (sub-topology-local
+        columns) the phase must schedule around — chunk-granular
+        cross-phase pipelining. A preload every condition's release
+        already clears (min release >= last occupied instant) is dropped:
+        such a phase cannot collide with it. Phases with a *uniform*
+        nonzero release are synthesized canonically at release 0 and
+        shifted back — the canonical sub-problem is literally the
+        release-0 phase, so isomorphic pods keep sharing one registry
+        entry even behind a chunk-granular junction. Phases that keep a
+        preload or carry heterogeneous (run-specific, e.g.
+        arrival-derived) releases bypass the registry entirely: their
+        schedules are tied to this run's absolute clock, so caching them
+        would only churn the LRU without ever hitting."""
         if not conds:
             return CollectiveAlgorithm(sub, [], [], name=kind)
+        if preload is not None and not len(preload):
+            preload = None
+        releases = [c.release for c in conds]
+        uniform = all(r == releases[0] for r in releases)
+        if preload is not None \
+                and min(releases) >= float(preload.end.max()) - 1e-9:
+            preload = None
+        shift = 0.0
+        if preload is None and uniform and releases[0] > 0.0:
+            shift = releases[0]
+            conds = [replace(c, release=0.0) for c in conds]
+        cacheable = cacheable and preload is None and uniform
         if self.registry is None or not cacheable:
-            return self._phase_algorithm(sub, conds, kind, replicate)
+            alg = self._phase_algorithm(sub, conds, kind, replicate,
+                                        preload)
+        else:
+            def synth(_group):
+                return self._phase_algorithm(sub, conds, kind, replicate,
+                                             None)
 
-        def synth(_group):
-            return self._phase_algorithm(sub, conds, kind, replicate)
-
-        # the phase key carries the resolved gateway strategy and the
-        # sketch fingerprint: an inter phase routed round-robin must never
-        # satisfy a TE or sketch-constrained request for the same
-        # sub-fabric/conditions (and vice versa)
-        sk = self.sketch
-        return self.registry.get_or_synthesize(
-            sub, f"hier:{kind}", range(len(sub.npus)), synth,
-            params=(sub.partition_fingerprint(), _signature(conds),
-                    replicate, self._effective_strategy(),
-                    sk.fingerprint() if sk is not None else None),
-        )
+            # the phase key carries the resolved gateway strategy and the
+            # sketch fingerprint: an inter phase routed round-robin must
+            # never satisfy a TE or sketch-constrained request for the same
+            # sub-fabric/conditions (and vice versa)
+            sk = self.sketch
+            alg = self.registry.get_or_synthesize(
+                sub, f"hier:{kind}", range(len(sub.npus)), synth,
+                params=(sub.partition_fingerprint(), _signature(conds),
+                        replicate, self._effective_strategy(),
+                        sk.fingerprint() if sk is not None else None),
+            )
+        if shift:
+            alg = CollectiveAlgorithm(
+                sub, alg.conditions, alg.columns.shifted(shift),
+                name=alg.name,
+                phase_spans=[(n, lo + shift, hi + shift)
+                             for n, lo, hi in alg.phase_spans])
+        return alg
 
     def _phase_algorithm(
         self, sub: Topology, conds: list[Condition], kind: str,
-        replicate: bool,
+        replicate: bool, preload: TransferColumns | None = None,
     ) -> CollectiveAlgorithm:
         """One phase's schedule: recursively through a nested
         :class:`HierarchicalSynthesizer` when the sub-topology itself
@@ -671,17 +734,28 @@ class HierarchicalSynthesizer:
         and scatter phases of a rack -> pod -> plane fabric decompose into
         per-rack plans, a pod boundary phase, and rack scatters), else flat
         engine synthesis. A nested :class:`HierarchyError` (missing
-        gateways, unreachable sub-pods, degenerate sub-partition) falls
-        back to flat synthesis of the phase — never a wrong plan."""
+        gateways, unreachable sub-pods, degenerate sub-partition, a
+        sequential nested regime that cannot honor ``preload``) falls
+        back to flat synthesis of the phase — never a wrong plan.
+
+        ``preload`` (sub-local columns) recurses with the conditions: the
+        nested composition re-projects it into each of its own phases, so
+        depth>=2 fabrics overlap preloaded traffic with their rack-level
+        phases instead of stalling behind a flat fallback."""
         if sub.partition is not None:
             nested = self._nested_for(sub)
             if nested.spans_conditions(conds):
                 try:
-                    return nested.spanning(conds, name=kind)
+                    return nested.spanning(conds, name=kind,
+                                           preload_cols=preload,
+                                           replicate=replicate)
                 except HierarchyError:
                     pass
+        pre = None
+        if preload is not None and len(preload):
+            pre = CollectiveAlgorithm(sub, [], preload, name="preload")
         return self.engine.synthesize(conds, name=kind, topology=sub,
-                                      replicate=replicate)
+                                      replicate=replicate, preload=pre)
 
     def _nested_for(self, sub: Topology) -> "HierarchicalSynthesizer":
         """The nested synthesizer over one partitioned pod sub-topology.
@@ -705,6 +779,8 @@ class HierarchicalSynthesizer:
     def spanning(
         self, conds: list[Condition], *, pipeline: str | bool = "auto",
         name: str = "pccl_hier_spanning",
+        preload_cols: TransferColumns | None = None,
+        replicate: bool = False,
     ) -> CollectiveAlgorithm:
         """Hierarchically synthesize an *arbitrary* pod-spanning condition
         set: the generic decomposition the named collectives build on, and
@@ -726,7 +802,19 @@ class HierarchicalSynthesizer:
         reachable candidates. Both are deterministic, and the per-gateway
         load histograms stay pod-position-independent on symmetric fabrics,
         so isomorphic pods keep sharing one registry-cached plan per phase
-        kind."""
+        kind.
+
+        ``preload_cols`` is pre-existing occupancy on *this* fabric (global
+        coordinates) every phase must schedule around — the chunk-granular
+        All-Reduce junction passes the Reduce-Scatter schedule here so the
+        gather half can overlap it per chunk on the shared links. Requires
+        the pipelined regime (sequential per-pod plans are canonically
+        timed from 0 and cannot avoid absolute-clock occupancy).
+
+        ``replicate`` forces the engine's path-replication fast path for
+        every phase even below the forced-pipeline size threshold — the
+        pods-of-pods recursion passes it down so a forced-pipeline outer
+        fabric keeps bulk-run replication inside its (small) pods too."""
         part = self.topology.partition
         if part is None:
             raise HierarchyError(f"{self.topology.name}: no partition set")
@@ -744,6 +832,14 @@ class HierarchicalSynthesizer:
         if -1 in pods:
             raise HierarchyError(
                 "condition endpoints include devices owned by no pod")
+        unowned = [n for n in self.topology.npus if part[n] == -1]
+        if unowned:
+            # an un-podded NPU may sit on the only path between two pod
+            # members (no phase view would include it), silently
+            # disconnecting a pod view — refuse, the caller falls back flat
+            raise HierarchyError(
+                f"NPUs {unowned} belong to no pod: un-podded devices can "
+                "carry pod-internal connectivity no phase view includes")
         involved = sorted(pods)
         if len(involved) < 2:
             raise HierarchyError("conditions do not span pods")
@@ -852,6 +948,7 @@ class HierarchicalSynthesizer:
             pipeline=pipeline, group_size=len(endpoints),
             arrival_node=egress,
             ingress_of=lambda g, q: ingress.get((g, q)),
+            preload_cols=preload_cols, force_replicate=replicate,
         )
 
     def all_gather(
@@ -1109,34 +1206,106 @@ class HierarchicalSynthesizer:
         hierarchical All-Gather (paper §4.5), composed on one clock through
         :class:`PhasePlan`. Both sub-collectives draw chunk ids from 0 in
         group order, so chunk ``i`` is reduced onto — and then gathered
-        from — ``group[i]``. The All-Gather phase is floor-shifted to the
-        Reduce-Scatter's end; each chunk's full sum is assembled at its
-        owner by then, so the copies it fans out are of fully-reduced
-        state."""
+        from — ``group[i]``.
+
+        In the pipelined regime the RS -> AG junction is *chunk-granular*:
+        each chunk's gather half is released at that chunk's own
+        reduce-completion time, and the gather phases are synthesized with
+        the Reduce-Scatter schedule preloaded as occupancy (RS and AG ride
+        the same links — time reversal preserves link ids), so early
+        chunks fan out while late chunks are still reducing and no link is
+        double-booked. The per-chunk release envelope is recorded as an
+        ``"all_gather/@release"`` provenance span. In the sequential
+        regime the All-Gather is floor-shifted to the Reduce-Scatter's end
+        (the classic barrier): every per-pod plan stays canonically timed
+        and registry-shareable."""
         group = list(group)
-        self._require(group)
+        involved = self._require(group)
+        if pipeline == "auto":
+            pipelined = (len(group) <= _AUTO_PIPELINE_MAX_GROUP
+                         and self._pipeline_safe(involved))
+        else:
+            pipelined = bool(pipeline)
         rs = self.reduce_scatter(group, bytes=bytes, pipeline=pipeline)
-        ag = self.all_gather(group, bytes=bytes, pipeline=pipeline)
         ar_conds = [
             ReduceCondition(c.chunk, c.srcs, c.srcs, bytes=bytes)
             for c in rs.conditions
         ]
+        if not pipelined:
+            ag = self.all_gather(group, bytes=bytes, pipeline=pipeline)
+            plan = PhasePlan(
+                phases=[
+                    PhaseSpec("reduce_scatter", algorithm=rs),
+                    PhaseSpec("all_gather", algorithm=ag,
+                              after=("reduce_scatter",)),
+                ],
+                conditions=ar_conds,
+                name="pccl_hier_all_reduce",
+            )
+            return renumber_chunks(self.engine.synthesize_plan(plan), ids)
+
+        # per-chunk reduce-completion times: the gather release vector
+        done: dict[int, float] = {c.chunk: 0.0 for c in rs.conditions}
+        cols = rs.columns
+        if len(cols):
+            uc, inv = np.unique(cols.chunk, return_inverse=True)
+            dmax = np.full(len(uc), -np.inf)
+            np.maximum.at(dmax, inv, cols.end)
+            for ck, d in zip(uc.tolist(), dmax.tolist()):
+                done[ck] = max(done[ck], d)
+        ag_conds = [
+            Condition(c.chunk, next(iter(c.dests)), frozenset(group),
+                      bytes=bytes, release=done[c.chunk],
+                      tag="hier_allreduce_ag")
+            for c in rs.conditions
+        ]
+        lo = min(done.values(), default=0.0)
+        hi = max(done.values(), default=0.0)
+        if lo == hi:
+            # degenerate release envelope (time reversal pivots every
+            # chunk's completion to the RS makespan on balanced fabrics):
+            # the gather half is exactly the *canonical* pipelined
+            # All-Gather shifted by that instant — every per-pod plan
+            # stays registry-shareable, and since all RS occupancy ends at
+            # the pivot no preload is needed
+            ag0 = self.spanning(
+                [replace(c, release=0.0) for c in ag_conds],
+                pipeline=True, name="pccl_hier_all_gather")
+            ag = CollectiveAlgorithm(
+                self.topology, ag_conds, ag0.columns.shifted(lo),
+                name=ag0.name,
+                phase_spans=[(n, a + lo, b + lo)
+                             for n, a, b in ag0.phase_spans])
+        else:
+            ag = self.spanning(ag_conds, pipeline=True,
+                               name="pccl_hier_all_gather",
+                               preload_cols=cols)
         plan = PhasePlan(
             phases=[
                 PhaseSpec("reduce_scatter", algorithm=rs),
-                PhaseSpec("all_gather", algorithm=ag,
-                          after=("reduce_scatter",)),
+                # absolutely timed via its per-chunk releases: no barrier
+                PhaseSpec("all_gather", algorithm=ag),
             ],
             conditions=ar_conds,
             name="pccl_hier_all_reduce",
         )
-        return renumber_chunks(self.engine.synthesize_plan(plan), ids)
+        alg = self.engine.synthesize_plan(plan)
+        if done:
+            # release provenance: the junction's per-chunk floor envelope,
+            # nested under the gather phase ("/" keeps it out of
+            # top_phase_spans) — barrier plans never carry this entry
+            alg.phase_spans.append((
+                "all_gather/@release",
+                min(done.values()), max(done.values()),
+            ))
+        return renumber_chunks(alg, ids)
 
     # -- stitching ----------------------------------------------------------
 
     def _compose(
         self, name, conds, involved, intra_conds, inter_conds, scatter_conds,
         *, pipeline, group_size, arrival_node, ingress_of,
+        preload_cols=None, force_replicate=False,
     ) -> CollectiveAlgorithm:
         """Build phase-local condition sets, synthesize (registry-shared
         where canonical), and stitch through the engine's PhasePlan."""
@@ -1150,9 +1319,21 @@ class HierarchicalSynthesizer:
                 "pipeline=True requires boundary links disjoint from pod "
                 "links (the inter phase would congest pod fabrics)"
             )
+        if preload_cols is not None and not pipeline:
+            raise HierarchyError(
+                "preloaded occupancy requires the pipelined regime "
+                "(sequential per-pod plans are canonically timed from 0 "
+                "and cannot schedule around absolute-clock occupancy)"
+            )
 
         bview = self._boundary()
-        replicate = not pipeline
+        # beyond the auto-pipelining size, a forced pipeline=True keeps the
+        # path-replication fast path: the full per-chunk search is what
+        # makes large pipelined fabrics infeasible, not the overlap itself.
+        # force_replicate carries that decision down the pods-of-pods
+        # recursion, whose nested group sizes are small again.
+        replicate = ((not pipeline) or force_replicate
+                     or group_size > _AUTO_PIPELINE_MAX_GROUP)
         phases: list[PhaseSpec] = []
         intra_names = []
 
@@ -1165,6 +1346,7 @@ class HierarchicalSynthesizer:
             alg = self._synthesize_local(
                 ctx.view.topology, phase_conds, kind="intra", cacheable=True,
                 replicate=replicate,
+                preload=self._project_preload(preload_cols, ctx.view),
             )
             intra_local[p] = alg
             intra_maps[p] = cmap
@@ -1207,6 +1389,8 @@ class HierarchicalSynthesizer:
                     replace(c, release=rel) if rel > c.release else c)
             inter_alg = self._synthesize_local(
                 bview.topology, rel_conds, kind="inter", cacheable=False,
+                replicate=replicate,
+                preload=self._project_preload(preload_cols, bview),
             )
             phases.append(PhaseSpec(
                 "inter", algorithm=inter_alg, topology=bview.topology,
@@ -1249,11 +1433,25 @@ class HierarchicalSynthesizer:
                     rel_conds.append(
                         replace(c, release=rel) if rel > c.release else c
                     )
+                # synthesized through _synthesize_local (not a raw conds
+                # PhaseSpec) so a partitioned pod recurses: rack-level
+                # phases overlap the arriving DCI traffic per chunk via
+                # the ingress-arrival releases, with the pod's own intra
+                # transfers (plus any caller preload) as occupancy the
+                # nested/flat search must schedule around
+                pre = [intra_local[q].columns]
+                proj = self._project_preload(preload_cols, ctx.view)
+                if proj is not None:
+                    pre.append(proj)
+                alg = self._synthesize_local(
+                    ctx.view.topology, rel_conds, kind="scatter",
+                    cacheable=False, replicate=replicate,
+                    preload=TransferColumns.concat(pre),
+                )
                 phases.append(PhaseSpec(
-                    f"scatter:{q}", conds=rel_conds,
+                    f"scatter:{q}", algorithm=alg,
                     topology=ctx.view.topology, node_map=ctx.view.nodes,
                     link_map=ctx.view.links, chunk_map=s_chunk_map,
-                    preload_from=(f"intra:{q}",), after=(),
                 ))
             else:
                 alg = self._synthesize_local(

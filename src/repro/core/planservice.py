@@ -16,7 +16,9 @@ the service adds the orchestration layer on top:
   on the cache being hot). Thread safety comes from the registry's own
   lock, so warm workers and foreground lookups interleave freely.
 * **metrics()** — hit/miss/disk-hit/eviction counters plus on-disk byte
-  traffic and warm bookkeeping, for fleet dashboards.
+  traffic, disk-tier eviction counters (``disk_evictions``/``disk_bytes``
+  when the shared dir is size-capped via ``max_disk_bytes`` or
+  ``PCCL_CACHE_MAX_BYTES``) and warm bookkeeping, for fleet dashboards.
 
 The service lives in ``repro.core`` but imports ``repro.launch`` lazily —
 only when a planner is first built — to keep the core layer import-clean.
@@ -43,12 +45,13 @@ class PlanService:
 
     def __init__(self, registry: AlgorithmRegistry | None = None, *,
                  cache_dir: str | None = None, max_entries: int = 256,
-                 max_workers: int = 2):
+                 max_workers: int = 2, max_disk_bytes: int | None = None):
         if registry is None:
             if cache_dir is None:
                 cache_dir = os.environ.get("PCCL_CACHE_DIR") or None
             registry = (AlgorithmRegistry(max_entries=max_entries,
-                                          cache_dir=cache_dir)
+                                          cache_dir=cache_dir,
+                                          max_disk_bytes=max_disk_bytes)
                         if cache_dir is not None else default_registry())
         self.registry = registry
         self._lock = threading.Lock()

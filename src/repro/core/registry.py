@@ -31,8 +31,10 @@ canonicalized, cached artifacts:
 from __future__ import annotations
 
 import hashlib
+import json
 import os
 import threading
+import time
 from collections import Counter, OrderedDict
 from dataclasses import dataclass, replace
 from typing import Callable, Sequence
@@ -54,8 +56,13 @@ _MAX_AUTOMORPHISMS = 4096
 # partition-tree fingerprint, and pod phases on nested-partitioned
 # sub-topologies synthesize recursively. v4: inter-pod traffic engineering
 # — hierarchical route and hier:* phase params now carry the resolved
-# gateway strategy and the CommSketch fingerprint.
-SCHEMA_VERSION = 4
+# gateway strategy and the CommSketch fingerprint. v5: chunk-granular
+# cross-phase pipelining — the hierarchical All-Reduce junction and the
+# pipelined scatter route are per-chunk released, and uniform-release
+# phases are cached canonically (release-stripped); a v4 barrier plan and
+# a v5 pipelined plan for the same key are different schedules, so entries
+# must never cross-serve.
+SCHEMA_VERSION = 5
 
 
 # ---------------------------------------------------------------------------
@@ -252,12 +259,16 @@ class RegistryStats:
     evictions: int = 0
     bytes_loaded: int = 0  # on-disk bytes of entries served from the cache dir
     bytes_stored: int = 0  # on-disk bytes written for fresh syntheses
+    disk_evictions: int = 0  # entries removed by the size-capped disk LRU
+    disk_bytes: int = 0  # cache-dir size after the last store/evict sweep
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "disk_hits": self.disk_hits, "evictions": self.evictions,
                 "bytes_loaded": self.bytes_loaded,
-                "bytes_stored": self.bytes_stored}
+                "bytes_stored": self.bytes_stored,
+                "disk_evictions": self.disk_evictions,
+                "disk_bytes": self.disk_bytes}
 
 
 class AlgorithmRegistry:
@@ -272,9 +283,18 @@ class AlgorithmRegistry:
     atomic renames, and corrupt/partial entries are dropped + resynthesized.
     """
 
-    def __init__(self, max_entries: int = 256, cache_dir: str | None = None):
+    def __init__(self, max_entries: int = 256, cache_dir: str | None = None,
+                 max_disk_bytes: int | None = None):
         self.max_entries = max_entries
         self.cache_dir = cache_dir
+        if max_disk_bytes is None:
+            env = os.environ.get("PCCL_CACHE_MAX_BYTES", "").strip()
+            if env:
+                try:
+                    max_disk_bytes = int(env)
+                except ValueError:
+                    max_disk_bytes = None
+        self.max_disk_bytes = max_disk_bytes
         self.stats = RegistryStats()
         self._lru: OrderedDict[tuple, CollectiveAlgorithm] = OrderedDict()
         self._lock = threading.RLock()
@@ -313,6 +333,93 @@ class AlgorithmRegistry:
         stem = hashlib.sha256(repr(key).encode()).hexdigest()
         return os.path.join(self.cache_dir, f"{stem}.npz")
 
+    # -- disk-tier LRU eviction ---------------------------------------------
+    #
+    # A shared PCCL_CACHE_DIR grows without bound as fabrics and schema
+    # versions churn, so the disk tier is size-capped (``max_disk_bytes`` /
+    # ``PCCL_CACHE_MAX_BYTES``): every load and store stamps the entry's
+    # access time into a manifest (atomic rename, last writer wins —
+    # approximate LRU is all eviction needs), and each store sweeps the
+    # directory, removing the stalest entries until the cap holds. The
+    # sweep is safe under concurrent readers and a churning writer: a file
+    # another process already evicted is simply skipped, a reader that
+    # loses a race re-synthesizes (the registry already tolerates missing
+    # entries), and the manifest tolerates corruption by rebuilding.
+
+    def _manifest_path(self) -> str:
+        return os.path.join(self.cache_dir, "manifest.json")
+
+    def _read_manifest(self) -> dict[str, float]:
+        try:
+            with open(self._manifest_path(), encoding="utf-8") as f:
+                man = json.load(f)
+            return {str(k): float(v) for k, v in man.items()}
+        except (OSError, ValueError, TypeError):
+            # missing (fresh dir) or corrupt (killed writer): entries
+            # unknown to the manifest rank oldest, so a rebuilt manifest
+            # only makes eviction more conservative, never wrong
+            return {}
+
+    def _write_manifest(self, man: dict[str, float]) -> None:
+        mf = self._manifest_path()
+        tmp = f"{mf}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(man, f)
+            os.replace(tmp, mf)
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+
+    def _touch_manifest(self, path: str) -> None:
+        """Stamp ``path``'s access time into the shared manifest."""
+        if self.cache_dir is None or self.max_disk_bytes is None:
+            return
+        man = self._read_manifest()
+        man[os.path.basename(path)] = time.time()
+        self._write_manifest(man)
+
+    def _evict_disk(self, keep: str | None = None) -> None:
+        """Sweep the cache dir down to ``max_disk_bytes``, stalest-first
+        by manifest access time (``keep`` — the entry just written — is
+        never evicted). Missing files are tolerated: another process may
+        have evicted them first."""
+        cap = self.max_disk_bytes
+        if cap is None or self.cache_dir is None:
+            return
+        try:
+            names = [n for n in os.listdir(self.cache_dir)
+                     if n.endswith(".npz")]
+        except OSError:
+            return
+        sizes: dict[str, int] = {}
+        total = 0
+        for n in names:
+            try:
+                sz = os.path.getsize(os.path.join(self.cache_dir, n))
+            except OSError:
+                continue  # evicted under our feet
+            sizes[n] = sz
+            total += sz
+        man = self._read_manifest()
+        if total > cap:
+            for n in sorted(sizes, key=lambda n: (man.get(n, 0.0), n)):
+                if total <= cap:
+                    break
+                if n == keep:
+                    continue
+                try:
+                    os.remove(os.path.join(self.cache_dir, n))
+                except OSError:
+                    pass  # a concurrent evictor got there first
+                total -= sizes[n]
+                man.pop(n, None)
+                self.stats.disk_evictions += 1
+            self._write_manifest(man)
+        self.stats.disk_bytes = total
+
     def _load_disk(self, key: tuple, topo: Topology) -> CollectiveAlgorithm | None:
         path = self._disk_path(key)
         if path is None:
@@ -324,6 +431,7 @@ class AlgorithmRegistry:
                 nbytes = os.path.getsize(path)
                 alg = load_plan_npz(path, topo)
                 self.stats.bytes_loaded += nbytes
+                self._touch_manifest(path)
                 return alg
             except (OSError, ValueError, KeyError, TypeError, AttributeError,
                     IndexError):
@@ -387,6 +495,8 @@ class AlgorithmRegistry:
                 pass
             return
         self.stats.bytes_stored += os.path.getsize(path)
+        self._touch_manifest(path)
+        self._evict_disk(keep=os.path.basename(path))
 
     # -- main entry ---------------------------------------------------------
 

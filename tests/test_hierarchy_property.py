@@ -25,6 +25,7 @@ import pytest
 
 from repro.core import AlgorithmRegistry, SynthesisEngine
 from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import Condition
 from repro.core.hierarchy import HierarchyError
 from repro.topology.topology import NodeType, Topology
 
@@ -173,6 +174,39 @@ def _corrupt(alg: CollectiveAlgorithm, rng: random.Random):
                                name=alg.name)
 
 
+def check_release_floor_seed(seed: int) -> None:
+    """Claim 3: per-chunk release floors are only ever *raised* through
+    phase composition. Whatever regime ``spanning()`` resolves, a
+    condition's release survives every phase kind it crosses — intra
+    resolution, the boundary inter phase, and the per-pod scatter — so no
+    transfer of a chunk ever starts below the caller's floor."""
+    rng = random.Random(seed)
+    topo = _gen_fabric(rng)
+    if topo.partition is None:
+        return
+    eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
+    npus = topo.npus
+    conds = []
+    for ck in range(rng.randint(1, 6)):
+        src = rng.choice(npus)
+        others = [n for n in npus if n != src]
+        if not others:
+            return
+        dests = rng.sample(others, rng.randint(1, min(4, len(others))))
+        conds.append(Condition(ck, src, frozenset(dests),
+                               release=float(rng.randint(0, 8))))
+    try:
+        alg = eng.hierarchical().spanning(conds)
+    except HierarchyError:
+        return  # legal refusal (single pod, missing gateways, ...)
+    alg.validate(mode="oracle")
+    rel = {c.chunk: c.release for c in conds}
+    for t in alg.transfers:
+        assert t.start >= rel[t.chunk], (
+            f"chunk {t.chunk}: transfer at {t.start} starts below the "
+            f"caller's release {rel[t.chunk]} — a phase lowered the floor")
+
+
 def check_corruption_seed(seed: int) -> None:
     """Claim 2: a single-transfer mutation flips bulk validation."""
     rng = random.Random(seed)
@@ -200,6 +234,11 @@ if HAVE_HYPOTHESIS:
     def test_random_corruption_flips_bulk_validation(seed):
         check_corruption_seed(seed)
 
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_release_floors_never_lowered(seed):
+        check_release_floor_seed(seed)
+
 else:  # seed-sweep fallback: same generator, fixed seeds
 
     @pytest.mark.parametrize("seed", range(0, 60))
@@ -209,3 +248,7 @@ else:  # seed-sweep fallback: same generator, fixed seeds
     @pytest.mark.parametrize("seed", range(1000, 1060))
     def test_random_corruption_flips_bulk_validation(seed):
         check_corruption_seed(seed)
+
+    @pytest.mark.parametrize("seed", range(2000, 2060))
+    def test_random_release_floors_never_lowered(seed):
+        check_release_floor_seed(seed)

@@ -101,3 +101,40 @@ def test_three_level_512_te_vs_rr_within_budget():
         f"{_TE_BUDGET_SECONDS}s — the TE assignment machinery has "
         f"stopped scaling"
     )
+
+
+# cold 2048-NPU three-level *pipelined* All-Reduce: ~85s synthesis + ~15s
+# bulk validation on a dev box — the chunk-granular junction plus forced
+# in-pod replication keeps the barrier-free route inside the same order
+# of magnitude as the sequential one
+_HIER3_PIPE_AR_BUDGET_SECONDS = 120.0
+
+
+@pytest.mark.slow
+def test_three_level_2048_pipelined_all_reduce_within_budget():
+    """Cold multi-level 2048-NPU chunk-granular (pipeline=True) All-Reduce:
+    synthesize + bulk-validate inside the budget, with registry misses
+    bounded by (phase kinds x levels) + 1 — the release-stripped uniform
+    phases keep sharing canonical per-pod plans, and the release-bearing
+    scatter/inter phases bypass the registry without churning it."""
+    topo = three_level(16, 16, 8, unit_links=True)
+    reg = AlgorithmRegistry()
+    eng = SynthesisEngine(topo, registry=reg)
+    t0 = time.perf_counter()
+    alg = eng.hierarchical().all_reduce(topo.npus, pipeline=True)
+    synth_s = time.perf_counter() - t0
+    alg.validate(mode="bulk")
+    wall_s = time.perf_counter() - t0
+    assert alg.name == "pccl_hier_all_reduce"
+    assert len(alg.conditions) == 2048
+    # the chunk-granular junction's release provenance is present
+    assert any(n == "all_gather/@release" for n, _, _ in alg.phase_spans)
+    kinds, levels = 3, 3
+    assert reg.stats.misses <= kinds * levels + 1, (
+        f"registry misses {reg.stats.misses} exceed the (kinds x levels) "
+        f"bound — pipelined phases are churning the registry")
+    assert wall_s < _HIER3_PIPE_AR_BUDGET_SECONDS, (
+        f"three-level 2048-NPU pipelined All-Reduce took {wall_s:.1f}s "
+        f"(synthesis {synth_s:.1f}s), budget "
+        f"{_HIER3_PIPE_AR_BUDGET_SECONDS}s"
+    )
