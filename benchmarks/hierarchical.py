@@ -24,7 +24,7 @@ Four row families:
 from __future__ import annotations
 
 from benchmarks.common import Row, timed
-from repro.core import AlgorithmRegistry, SynthesisEngine
+from repro.core import AlgorithmRegistry, CollectiveRequest, SynthesisEngine
 from repro.topology import multi_pod, three_level
 
 
@@ -80,8 +80,8 @@ def run(full: bool = False) -> list[Row]:
     eng = SynthesisEngine(topo, registry=AlgorithmRegistry())
     for kind in ("all_gather", "all_to_all", "reduce_scatter", "all_reduce"):
         hier, hier_us = timed(getattr(eng, kind), topo.npus)
-        flat, flat_us = timed(getattr(eng, kind), topo.npus,
-                              hierarchy="never")
+        flat, flat_us = timed(eng.collective, CollectiveRequest(
+            kind, group=tuple(topo.npus), hierarchy="never"))
         hier.validate()
         flat.validate()
         rows.append(Row(
@@ -104,7 +104,8 @@ def run(full: bool = False) -> list[Row]:
     pipe, us = timed(eng.hierarchical().all_reduce, topo.npus,
                      pipeline=True)
     pipe.validate()
-    flat = eng.all_reduce(topo.npus, hierarchy="never")
+    flat = eng.collective(CollectiveRequest(
+        "all_reduce", group=tuple(topo.npus), hierarchy="never"))
     rows.append(Row(
         "fig_hier_pipe_ar_64", us,
         f"npus=64;pods={topo.num_pods};makespan={pipe.makespan};"

@@ -63,6 +63,7 @@ def main() -> None:
         plan_store,
         process_group,
         registry_amortization,
+        repair,
         roofline,
         synthesis_chunks,
         synthesis_scale,
@@ -79,6 +80,7 @@ def main() -> None:
         ("fig19", pg_sensitivity),
         ("fig_hier", hierarchical),
         ("fig_plan", plan_store),
+        ("fig_repair", repair),
         ("registry", registry_amortization),
         ("roofline", roofline),
     ]

@@ -2,42 +2,50 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a 4x4 mesh, synthesizes an All-Gather for a 3-NPU process group and an
-All-to-All for the whole mesh, validates both, compares against the Direct
-baseline, and prints the ppermute translation.
+Builds a 4x4 mesh, synthesizes an All-Gather for a 3-NPU process group and
+an All-to-All for the whole mesh through the :class:`CollectiveRequest`
+API, validates both, compares against the Direct baseline, prints the
+ppermute translation, and finishes with a fault drill: a link dies and the
+plan is repaired incrementally instead of re-synthesized from scratch.
 """
 
 from repro.core import (
+    AlgorithmRegistry,
+    CollectiveRequest,
+    DegradationEvent,
+    PlanRepairer,
+    SynthesisEngine,
     direct_all_to_all,
-    synthesize_all_gather,
-    synthesize_all_to_all,
     to_msccl_json,
     to_ppermute_program,
 )
-from repro.topology import mesh2d
+from repro.topology import mesh2d, multi_pod
 
 
 def main():
     topo = mesh2d(4, 4)
+    eng = SynthesisEngine(topo)
     print(f"topology: {topo}")
 
     # --- process-group All-Gather: corners only ---
-    group = [0, 3, 12]
-    alg = synthesize_all_gather(topo, group)
+    # one request object carries the whole collective spec (kind, group,
+    # payload, chunking, routing) — the same value keys the plan registry
+    req = CollectiveRequest("all_gather", group=(0, 3, 12))
+    alg = eng.collective(req)
     alg.validate()
     used = {t.src for t in alg.transfers} | {t.dst for t in alg.transfers}
-    print(f"\nAll-Gather over process group {group}:")
+    print(f"\nAll-Gather over process group {list(req.group)}:")
     print(f"  makespan={alg.makespan} steps, transfers={alg.num_transfers}")
     print(f"  NPUs touched: {sorted(used)} (out-of-group forwarding: "
-          f"{sorted(used - set(group))})")
+          f"{sorted(used - set(req.group))})")
     for t in alg.transfers[:6]:
         print(f"    t={t.start:>4}: chunk {t.chunk} {t.src} -> {t.dst}")
 
     # --- whole-mesh All-to-All vs Direct ---
-    full = list(range(16))
-    a2a = synthesize_all_to_all(topo, full)
+    full = tuple(range(16))
+    a2a = eng.collective(CollectiveRequest("all_to_all", group=full))
     a2a.validate()
-    direct = direct_all_to_all(topo, full)
+    direct = direct_all_to_all(topo, list(full))
     print("\nAll-to-All over all 16 NPUs:")
     print(f"  PCCL makespan   = {a2a.makespan}")
     print(f"  Direct makespan = {direct.makespan}")
@@ -50,6 +58,23 @@ def main():
     print("first round:", [(s.src, s.dst) for s in prog.rounds[0]][:8], "...")
     ir = to_msccl_json(alg)
     print(f"\nMSCCL-IR export: {len(ir)} bytes of JSON (alg 'pccl_all_gather')")
+
+    # --- degraded-fabric repair ---
+    # plan a pod-spanning All-Gather with phase capture, kill one
+    # pod-internal link, and patch only the damaged pod's phases; the
+    # undamaged pods' schedules survive verbatim
+    pods = multi_pod(4, 4, 4, unit_links=True)
+    rp = PlanRepairer(pods, registry=AlgorithmRegistry(), pipeline=False)
+    preq = CollectiveRequest("all_gather", group=tuple(pods.npus))
+    rp.plan(preq)
+    victim = next(
+        l.id for l in pods.links
+        if l.id not in {b.id for b in pods.boundary_links()})
+    res = rp.repair(preq, DegradationEvent(failed_links=[victim]))
+    res.algorithm.validate()
+    print(f"\nlink {victim} died on {pods.name}: strategy={res.strategy}, "
+          f"{res.phases_kept} phases kept verbatim, "
+          f"{res.phases_resynthesized} re-synthesized")
 
 
 if __name__ == "__main__":

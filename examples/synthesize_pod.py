@@ -3,6 +3,12 @@ groups running DIFFERENT collectives (All-to-Allv + All-Gather) are jointly
 synthesized over one shared TEN; NPUs outside both groups forward traffic.
 
     PYTHONPATH=src python examples/synthesize_pod.py
+
+This is the *joint* synthesis layer: condition builders (``all_gather``,
+``all_to_allv``, ...) compose several groups' requirements into one
+synthesis problem. A single collective goes through the
+:class:`repro.core.CollectiveRequest` entry point instead — see
+``examples/quickstart.py``.
 """
 
 from repro.core import (

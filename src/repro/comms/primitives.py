@@ -29,6 +29,7 @@ from repro.comms.executor import (
 )
 from repro.core.engine import SynthesisEngine
 from repro.core.registry import default_registry, topology_fingerprint
+from repro.core.request import CollectiveRequest
 from repro.core.translate import PpermuteProgram, to_ppermute_program
 from repro.topology.topology import Topology
 
@@ -92,18 +93,13 @@ def synthesize_program(
         _PROGRAM_CACHE.move_to_end(key)
     else:
         engine = _engine_for(topo, registry)
-        group = list(spec.group)
-        if spec.kind == "all_gather":
-            alg = engine.all_gather(group, bytes=nbytes)
-        elif spec.kind == "all_to_all":
-            alg = engine.all_to_all(group, bytes=nbytes)
-        elif spec.kind == "reduce_scatter":
-            alg = engine.reduce_scatter(group, bytes=nbytes)
-        elif spec.kind == "all_reduce":
-            alg = engine.all_reduce(group, bytes=nbytes,
-                                    pipelined=pipelined_ar)
-        else:
+        if spec.kind not in ("all_gather", "all_to_all", "reduce_scatter",
+                             "all_reduce"):
             raise ValueError(f"unknown collective kind {spec.kind!r}")
+        req = CollectiveRequest(
+            spec.kind, group=tuple(spec.group), bytes=nbytes,
+            pipelined=pipelined_ar if spec.kind == "all_reduce" else False)
+        alg = engine.collective(req)
         alg.validate()
         prog = to_ppermute_program(alg, device_of_npu)
         _PROGRAM_CACHE[key] = prog

@@ -25,7 +25,18 @@ from repro.core.conditions import (
     scatter,
 )
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine
+from repro.core.errors import FabricDegradedError, PCCLError
 from repro.core.hierarchy import HierarchicalSynthesizer, HierarchyError
+from repro.core.repair import (
+    DamageReport,
+    DegradationEvent,
+    PlanRepairer,
+    RepairResult,
+)
+from repro.core.request import (
+    CollectiveRequest,
+    PCCLDeprecationWarning,
+)
 from repro.core.traffic import CommSketch, SketchInfeasibleError, \
     TrafficEngineer
 from repro.core.registry import (
@@ -89,6 +100,14 @@ __all__ = [
     "PhaseSpec",
     "HierarchicalSynthesizer",
     "HierarchyError",
+    "PCCLError",
+    "FabricDegradedError",
+    "CollectiveRequest",
+    "PCCLDeprecationWarning",
+    "DamageReport",
+    "DegradationEvent",
+    "PlanRepairer",
+    "RepairResult",
     "CommSketch",
     "SketchInfeasibleError",
     "TrafficEngineer",

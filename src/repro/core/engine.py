@@ -20,6 +20,7 @@ for backward compatibility; new code should hold a ``SynthesisEngine``.
 from __future__ import annotations
 
 import heapq
+import warnings
 from dataclasses import dataclass, replace
 from typing import Callable, Sequence
 
@@ -31,6 +32,8 @@ from repro.core.algorithm import (CollectiveAlgorithm, Transfer,
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.pathfinding import PathResult, bfs_cont, bfs_int
 from repro.core.registry import renumber_chunks
+from repro.core.request import (_UNSET, CollectiveRequest,
+                                PCCLDeprecationWarning)
 from repro.core.ten import TEN
 from repro.topology.topology import Topology
 
@@ -229,6 +232,20 @@ class SynthesisEngine:
         self._distances = _DistanceCache(topology)
         self._rev_topo: Topology | None = None
         self._hier = None  # lazy HierarchicalSynthesizer
+        # request-configured engine variants (gateway_strategy/sketch
+        # overrides), sharing this engine's topology and registry
+        self._variants: dict = {}
+        # opt-in plan-capture hook (repro.core.repair): when a list, every
+        # synthesize_plan() appends (plan, result) so a repairer can keep
+        # the composed PhaseSpec record alongside the stitched algorithm
+        self._capture: list | None = None
+        # degradation fingerprint (repro.core.repair): set on engines built
+        # over degraded fabric views. Folded into whole-collective registry
+        # route params — on top of the degraded topology's own structure
+        # hash — so a degraded plan never cross-serves a healthy fabric's
+        # request or another event's. Appended only when set, keeping
+        # healthy-fabric keys bit-identical to the pre-repair format.
+        self.degradation: str | None = None
         # reusable per-topology state: {id(topo): (topo, TEN)} — the forward
         # and reversed views in practice. TENs are reset() per synthesis
         # instead of reallocated; distance caches persist across calls.
@@ -708,11 +725,14 @@ class SynthesisEngine:
             # shifted onto this plan's clock, as "parent/child" entries
             for child, lo, hi in alg.phase_spans:
                 spans.append((f"{ph.name}/{child}", lo + shift, hi + shift))
-        return CollectiveAlgorithm(
+        result = CollectiveAlgorithm(
             self.topology, list(plan.conditions),
             TransferColumns.concat(merged), name=plan.name,
             phase_spans=spans,
         )
+        if self._capture is not None:
+            self._capture.append((plan, result))
+        return result
 
     @staticmethod
     def _chunk_floors(
@@ -861,123 +881,213 @@ class SynthesisEngine:
 
     # -- named collectives --------------------------------------------------
 
-    def all_gather(
-        self, group: Sequence[int], *, bytes: float = 1.0,
-        chunks_per_npu: int = 1, ids: ChunkIds | None = None,
-        hierarchy: str = "auto",
+    def collective(
+        self, request: CollectiveRequest, *, ids: ChunkIds | None = None,
     ) -> CollectiveAlgorithm:
-        use_hier, route = self._route_hierarchical(hierarchy, group)
+        """Synthesize the collective described by ``request`` — the primary
+        entry point; the named methods below are thin legacy shims over it.
+
+        A request with ``gateway_strategy``/``sketch`` set synthesizes
+        through a memoized engine variant configured accordingly (sharing
+        this engine's topology and registry); ``None`` inherits this
+        engine's configuration. ``ids`` stays a call-site argument: it is
+        the caller's mutable chunk-id allocator, not part of the request's
+        identity."""
+        if request.gateway_strategy is None and request.sketch is None:
+            return self._collective(request, ids=ids)
+        return self._configured(
+            request.gateway_strategy, request.sketch
+        )._collective(request, ids=ids)
+
+    def _configured(self, gateway_strategy, sketch) -> "SynthesisEngine":
+        """A memoized engine variant with the given overrides (None =
+        inherit), sharing topology + registry so cached plans cross over."""
+        gs = (gateway_strategy if gateway_strategy is not None
+              else self.gateway_strategy)
+        sk = sketch if sketch is not None else self.sketch
+        key = (gs, sk.fingerprint() if sk is not None else None)
+        if gs == self.gateway_strategy and key[1] == (
+                self.sketch.fingerprint() if self.sketch is not None
+                else None):
+            return self
+        eng = self._variants.get(key)
+        if eng is None:
+            eng = SynthesisEngine(self.topology, registry=self.registry,
+                                  gateway_strategy=gs, sketch=sk)
+            eng.degradation = self.degradation
+            self._variants[key] = eng
+        return eng
+
+    def _collective(
+        self, req: CollectiveRequest, *, ids: ChunkIds | None,
+    ) -> CollectiveAlgorithm:
+        group = list(req.group)
+        if not group:
+            raise ValueError(f"{req.kind}: request has an empty group")
+        kind = req.kind
+        if kind == "reduce":
+            root_pos = group.index(req.root)
+
+            def synth(g: list[int]) -> CollectiveAlgorithm:
+                return self._reduce_impl(g, g[root_pos], bytes=req.bytes)
+
+            return self._routed("reduce", group, synth,
+                                params=self._params(req, None), ids=ids)
+        use_hier, route = self._route_hierarchical(req.hierarchy, group)
 
         def synth(g: list[int]) -> CollectiveAlgorithm:
             if use_hier:
                 from repro.core.hierarchy import HierarchyError
 
                 try:
-                    return self.hierarchical().all_gather(
-                        g, bytes=bytes, chunks_per_npu=chunks_per_npu)
+                    return self._hier_impl(kind, g, req)
                 except HierarchyError:
-                    # a sketch pins the hierarchical route: a silent flat
-                    # fallback would ignore its hard constraints
-                    if hierarchy == "always" or self.sketch is not None:
+                    # HierarchyError is advisory (see repro.core.errors):
+                    # the auto route may retry flat — unless the caller
+                    # pinned the hierarchical path or a sketch is attached
+                    # (a flat plan would ignore its hard constraints)
+                    if req.hierarchy == "always" or self.sketch is not None:
                         raise
-            conds = cnd.all_gather(g, ids=ChunkIds(), bytes=bytes,
-                                   chunks_per_npu=chunks_per_npu)
-            return self.synthesize(conds, name="pccl_all_gather")
+            return self._flat_impl(kind, g, req)
 
-        return self._routed("all_gather", group, synth,
-                            params=(bytes, chunks_per_npu, route), ids=ids)
+        return self._routed(kind, group, synth,
+                            params=self._params(req, route), ids=ids)
+
+    def _params(self, req: CollectiveRequest, route) -> tuple:
+        """The request's registry params, extended with the degradation
+        fingerprint on degraded-fabric engines (see ``self.degradation``)."""
+        params = req.registry_params(route)
+        if self.degradation is not None:
+            params = (*params, ("degraded", self.degradation))
+        return params
+
+    def _hier_impl(self, kind, g, req: CollectiveRequest):
+        h = self.hierarchical()
+        if kind == "all_gather":
+            return h.all_gather(g, bytes=req.bytes, chunks_per_npu=req.chunks)
+        if kind == "all_to_all":
+            return h.all_to_all(g, bytes=req.bytes, chunks_per_pair=req.chunks)
+        if kind == "reduce_scatter":
+            return h.reduce_scatter(g, bytes=req.bytes,
+                                    chunks_per_npu=req.chunks)
+        return h.all_reduce(g, bytes=req.bytes)
+
+    def _flat_impl(self, kind, g, req: CollectiveRequest):
+        if kind == "all_gather":
+            conds = cnd.all_gather(g, ids=ChunkIds(), bytes=req.bytes,
+                                   chunks_per_npu=req.chunks)
+            return self.synthesize(conds, name="pccl_all_gather")
+        if kind == "all_to_all":
+            conds = cnd.all_to_all(g, ids=ChunkIds(), bytes=req.bytes,
+                                   chunks_per_pair=req.chunks)
+            return self.synthesize(conds, name="pccl_all_to_all")
+        if kind == "reduce_scatter":
+            return self._reduce_scatter_impl(g, bytes=req.bytes,
+                                             chunks_per_npu=req.chunks)
+        return self._all_reduce_impl(g, bytes=req.bytes,
+                                     pipelined=req.pipelined)
+
+    # -- legacy kwarg shims -------------------------------------------------
+
+    def _shim(self, kind, group, explicit, ids, **req_kw):
+        """Common body of the legacy named-collective shims: accept a
+        CollectiveRequest positionally, else build one from the legacy
+        kwargs — warning (with the *caller's* frame blamed) only when a
+        tuning kwarg was explicitly passed, so bare ``eng.all_gather(g)``
+        stays silent sugar."""
+        if isinstance(group, CollectiveRequest):
+            if group.kind != kind:
+                raise ValueError(
+                    f"SynthesisEngine.{kind}() got a {group.kind!r} request")
+            if explicit:
+                raise TypeError(
+                    f"SynthesisEngine.{kind}(): pass tuning in the "
+                    f"CollectiveRequest, not alongside it")
+            return self.collective(group, ids=ids)
+        if explicit:
+            warnings.warn(
+                f"SynthesisEngine.{kind}({', '.join(sorted(explicit))}) "
+                f"kwargs are deprecated; pass a CollectiveRequest to "
+                f"SynthesisEngine.collective()",
+                PCCLDeprecationWarning, stacklevel=3)
+        req = CollectiveRequest(kind, group=tuple(group), **req_kw)
+        return self._collective(req, ids=ids)
+
+    def all_gather(
+        self, group, *, bytes=_UNSET, chunks_per_npu=_UNSET, ids=None,
+        hierarchy=_UNSET,
+    ) -> CollectiveAlgorithm:
+        explicit = {k for k, v in (("bytes", bytes),
+                                   ("chunks_per_npu", chunks_per_npu),
+                                   ("hierarchy", hierarchy))
+                    if v is not _UNSET}
+        return self._shim(
+            "all_gather", group, explicit, ids,
+            bytes=1.0 if bytes is _UNSET else bytes,
+            chunks=1 if chunks_per_npu is _UNSET else chunks_per_npu,
+            hierarchy="auto" if hierarchy is _UNSET else hierarchy)
 
     def all_to_all(
-        self, group: Sequence[int], *, bytes: float = 1.0,
-        chunks_per_pair: int = 1, ids: ChunkIds | None = None,
-        hierarchy: str = "auto",
+        self, group, *, bytes=_UNSET, chunks_per_pair=_UNSET, ids=None,
+        hierarchy=_UNSET,
     ) -> CollectiveAlgorithm:
-        use_hier, route = self._route_hierarchical(hierarchy, group)
-
-        def synth(g: list[int]) -> CollectiveAlgorithm:
-            if use_hier:
-                from repro.core.hierarchy import HierarchyError
-
-                try:
-                    return self.hierarchical().all_to_all(
-                        g, bytes=bytes, chunks_per_pair=chunks_per_pair)
-                except HierarchyError:
-                    # a sketch pins the hierarchical route: a silent flat
-                    # fallback would ignore its hard constraints
-                    if hierarchy == "always" or self.sketch is not None:
-                        raise
-            conds = cnd.all_to_all(g, ids=ChunkIds(), bytes=bytes,
-                                   chunks_per_pair=chunks_per_pair)
-            return self.synthesize(conds, name="pccl_all_to_all")
-
-        return self._routed("all_to_all", group, synth,
-                            params=(bytes, chunks_per_pair, route), ids=ids)
+        explicit = {k for k, v in (("bytes", bytes),
+                                   ("chunks_per_pair", chunks_per_pair),
+                                   ("hierarchy", hierarchy))
+                    if v is not _UNSET}
+        return self._shim(
+            "all_to_all", group, explicit, ids,
+            bytes=1.0 if bytes is _UNSET else bytes,
+            chunks=1 if chunks_per_pair is _UNSET else chunks_per_pair,
+            hierarchy="auto" if hierarchy is _UNSET else hierarchy)
 
     def reduce(
-        self, group: Sequence[int], root: int, *, bytes: float = 1.0,
-        ids: ChunkIds | None = None,
+        self, group, root=None, *, bytes=_UNSET, ids=None,
     ) -> CollectiveAlgorithm:
-        group = list(group)
-        root_pos = group.index(root)
-
-        def synth(g: list[int]) -> CollectiveAlgorithm:
-            return self._reduce_impl(g, g[root_pos], bytes=bytes)
-
-        return self._routed("reduce", group, synth,
-                            params=(bytes, root_pos), ids=ids)
+        if isinstance(group, CollectiveRequest):
+            if root is not None:
+                raise TypeError(
+                    "SynthesisEngine.reduce(): root lives in the request")
+            return self._shim("reduce", group, set(), ids)
+        if root is None:
+            raise TypeError("SynthesisEngine.reduce() needs root")
+        explicit = {"bytes"} if bytes is not _UNSET else set()
+        return self._shim(
+            "reduce", group, explicit, ids,
+            bytes=1.0 if bytes is _UNSET else bytes, root=root)
 
     def reduce_scatter(
-        self, group: Sequence[int], *, bytes: float = 1.0,
-        chunks_per_npu: int = 1, ids: ChunkIds | None = None,
-        hierarchy: str = "auto",
+        self, group, *, bytes=_UNSET, chunks_per_npu=_UNSET, ids=None,
+        hierarchy=_UNSET,
     ) -> CollectiveAlgorithm:
-        use_hier, route = self._route_hierarchical(hierarchy, group)
-
-        def synth(g: list[int]) -> CollectiveAlgorithm:
-            if use_hier:
-                from repro.core.hierarchy import HierarchyError
-
-                try:
-                    return self.hierarchical().reduce_scatter(
-                        g, bytes=bytes, chunks_per_npu=chunks_per_npu)
-                except HierarchyError:
-                    # a sketch pins the hierarchical route: a silent flat
-                    # fallback would ignore its hard constraints
-                    if hierarchy == "always" or self.sketch is not None:
-                        raise
-            return self._reduce_scatter_impl(g, bytes=bytes,
-                                             chunks_per_npu=chunks_per_npu)
-
-        return self._routed("reduce_scatter", group, synth,
-                            params=(bytes, chunks_per_npu, route), ids=ids)
+        explicit = {k for k, v in (("bytes", bytes),
+                                   ("chunks_per_npu", chunks_per_npu),
+                                   ("hierarchy", hierarchy))
+                    if v is not _UNSET}
+        return self._shim(
+            "reduce_scatter", group, explicit, ids,
+            bytes=1.0 if bytes is _UNSET else bytes,
+            chunks=1 if chunks_per_npu is _UNSET else chunks_per_npu,
+            hierarchy="auto" if hierarchy is _UNSET else hierarchy)
 
     def all_reduce(
-        self, group: Sequence[int], *, bytes: float = 1.0,
-        ids: ChunkIds | None = None, pipelined: bool = False,
-        hierarchy: str = "auto",
+        self, group, *, bytes=_UNSET, ids=None, pipelined=_UNSET,
+        hierarchy=_UNSET,
     ) -> CollectiveAlgorithm:
         """All-Reduce = Reduce-Scatter then All-Gather. Pod-spanning groups
         on partitioned fabrics route hierarchically (both halves composed
         through the pod-aware pipeline); ``pipelined`` applies to the flat
         route only — the hierarchical composition runs its phases on the
         dependency floors derived by ``synthesize_plan``."""
-        use_hier, route = self._route_hierarchical(hierarchy, group)
-
-        def synth(g: list[int]) -> CollectiveAlgorithm:
-            if use_hier:
-                from repro.core.hierarchy import HierarchyError
-
-                try:
-                    return self.hierarchical().all_reduce(g, bytes=bytes)
-                except HierarchyError:
-                    # a sketch pins the hierarchical route: a silent flat
-                    # fallback would ignore its hard constraints
-                    if hierarchy == "always" or self.sketch is not None:
-                        raise
-            return self._all_reduce_impl(g, bytes=bytes, pipelined=pipelined)
-
-        return self._routed("all_reduce", group, synth,
-                            params=(bytes, pipelined, route), ids=ids)
+        explicit = {k for k, v in (("bytes", bytes),
+                                   ("pipelined", pipelined),
+                                   ("hierarchy", hierarchy))
+                    if v is not _UNSET}
+        return self._shim(
+            "all_reduce", group, explicit, ids,
+            bytes=1.0 if bytes is _UNSET else bytes,
+            pipelined=False if pipelined is _UNSET else pipelined,
+            hierarchy="auto" if hierarchy is _UNSET else hierarchy)
 
     # -- reduction internals (paper §4.5, Fig. 8) ---------------------------
 

@@ -69,6 +69,7 @@ from repro.core.algorithm import CollectiveAlgorithm, TransferColumns, \
 from repro.core.conditions import ChunkIds, Condition, ReduceCondition
 from repro.core.engine import PhasePlan, PhaseSpec, SynthesisEngine, \
     time_reversed
+from repro.core.errors import PCCLError
 from repro.core.registry import renumber_chunks
 from repro.core.traffic import CommSketch, SketchInfeasibleError, \
     TrafficEngineer
@@ -81,10 +82,12 @@ from repro.topology.topology import Topology, TopologyView
 _AUTO_PIPELINE_MAX_GROUP = 256
 
 
-class HierarchyError(ValueError):
+class HierarchyError(PCCLError, ValueError):
     """The group/fabric cannot take the hierarchical path (no partition,
     single pod, missing gateways, unreachable pods). Callers fall back to
-    flat synthesis."""
+    flat synthesis — the advisory end of the :class:`PCCLError` fallback
+    contract (see :mod:`repro.core.errors`). ``ValueError`` ancestry is
+    kept for backward compatibility."""
 
 
 def _uniform_singletons(conds: list[Condition]) -> bool:
@@ -656,6 +659,7 @@ class HierarchicalSynthesizer:
         self, sub: Topology, conds: list[Condition], *, kind: str,
         cacheable: bool, replicate: bool = False,
         preload: TransferColumns | None = None,
+        pipeline: str | bool = "auto",
     ) -> CollectiveAlgorithm:
         """Synthesize a phase on its (sub-)topology, through the registry
         when one is attached so isomorphic pods (equal sub-topology
@@ -699,22 +703,29 @@ class HierarchicalSynthesizer:
         cacheable = cacheable and preload is None and uniform
         if self.registry is None or not cacheable:
             alg = self._phase_algorithm(sub, conds, kind, replicate,
-                                        preload)
+                                        preload, pipeline=pipeline)
         else:
             def synth(_group):
                 return self._phase_algorithm(sub, conds, kind, replicate,
-                                             None)
+                                             None, pipeline=pipeline)
 
             # the phase key carries the resolved gateway strategy and the
             # sketch fingerprint: an inter phase routed round-robin must
             # never satisfy a TE or sketch-constrained request for the same
-            # sub-fabric/conditions (and vice versa)
+            # sub-fabric/conditions (and vice versa). Explicitly-sequential
+            # recursion (pipeline=False — the repair-friendly regime) is
+            # marked too: its nested schedules differ from the auto
+            # regime's, and the marker is appended only when forced so
+            # every pre-existing key stays bit-identical
             sk = self.sketch
+            params = (sub.partition_fingerprint(), _signature(conds),
+                      replicate, self._effective_strategy(),
+                      sk.fingerprint() if sk is not None else None)
+            if pipeline is False:
+                params = (*params, "seq")
             alg = self.registry.get_or_synthesize(
                 sub, f"hier:{kind}", range(len(sub.npus)), synth,
-                params=(sub.partition_fingerprint(), _signature(conds),
-                        replicate, self._effective_strategy(),
-                        sk.fingerprint() if sk is not None else None),
+                params=params,
             )
         if shift:
             alg = CollectiveAlgorithm(
@@ -727,6 +738,7 @@ class HierarchicalSynthesizer:
     def _phase_algorithm(
         self, sub: Topology, conds: list[Condition], kind: str,
         replicate: bool, preload: TransferColumns | None = None,
+        pipeline: str | bool = "auto",
     ) -> CollectiveAlgorithm:
         """One phase's schedule: recursively through a nested
         :class:`HierarchicalSynthesizer` when the sub-topology itself
@@ -747,6 +759,7 @@ class HierarchicalSynthesizer:
             if nested.spans_conditions(conds):
                 try:
                     return nested.spanning(conds, name=kind,
+                                           pipeline=pipeline,
                                            preload_cols=preload,
                                            replicate=replicate)
                 except HierarchyError:
@@ -772,6 +785,11 @@ class HierarchicalSynthesizer:
             h.gateway_strategy = self.gateway_strategy
             ent = (sub, h)
             self._nested[id(sub)] = ent
+        # plan capture recurses: a pods-of-pods spanning records its nested
+        # per-pod compositions too, so repair can patch a damaged rack
+        # without re-spanning the whole pod. Synced on every lookup (the
+        # nested synthesizer is memoized, the hook is per-plan() call).
+        ent[1].engine._capture = self.engine._capture
         return ent[1]
 
     # -- collectives --------------------------------------------------------
@@ -1308,7 +1326,16 @@ class HierarchicalSynthesizer:
         preload_cols=None, force_replicate=False,
     ) -> CollectiveAlgorithm:
         """Build phase-local condition sets, synthesize (registry-shared
-        where canonical), and stitch through the engine's PhasePlan."""
+        where canonical), and stitch through the engine's PhasePlan.
+
+        An *explicitly* sequential request (``pipeline=False``, as opposed
+        to auto-resolved) recurses sequentially: every nested (pods-of-pods)
+        phase is then canonically timed and registry-cacheable at every
+        level — what :mod:`repro.core.repair` plans with, so a later
+        phase-local repair re-synthesizes only the damaged sub-fabric and
+        registry-hits everything else. Auto-resolved sequential keeps the
+        historical behaviour (nested levels re-decide by their own size)."""
+        child_pipeline: str | bool = "auto" if pipeline is not False else False
         if pipeline == "auto":
             pipeline = (
                 group_size <= _AUTO_PIPELINE_MAX_GROUP
@@ -1347,6 +1374,7 @@ class HierarchicalSynthesizer:
                 ctx.view.topology, phase_conds, kind="intra", cacheable=True,
                 replicate=replicate,
                 preload=self._project_preload(preload_cols, ctx.view),
+                pipeline=child_pipeline,
             )
             intra_local[p] = alg
             intra_maps[p] = cmap
@@ -1400,7 +1428,7 @@ class HierarchicalSynthesizer:
         else:
             inter_alg = self._synthesize_local(
                 bview.topology, b_conds, kind="inter", cacheable=True,
-                replicate=True,
+                replicate=True, pipeline=child_pipeline,
             )
             phases.append(PhaseSpec(
                 "inter", algorithm=inter_alg, topology=bview.topology,
@@ -1457,6 +1485,7 @@ class HierarchicalSynthesizer:
                 alg = self._synthesize_local(
                     ctx.view.topology, s_conds, kind="scatter",
                     cacheable=True, replicate=True,
+                    pipeline=child_pipeline,
                 )
                 phases.append(PhaseSpec(
                     f"scatter:{q}", algorithm=alg,

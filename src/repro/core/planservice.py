@@ -15,6 +15,9 @@ the service adds the orchestration layer on top:
   a small thread pool (``block=False``; call :meth:`drain` before relying
   on the cache being hot). Thread safety comes from the registry's own
   lock, so warm workers and foreground lookups interleave freely.
+* **repair()** — fault-aware incremental plan repair through a memoized
+  per-topology :class:`repro.core.repair.PlanRepairer` sharing the same
+  registry, with phase-hit/fallback/failure counters in the metrics.
 * **metrics()** — hit/miss/disk-hit/eviction counters plus on-disk byte
   traffic, disk-tier eviction counters (``disk_evictions``/``disk_bytes``
   when the shared dir is size-capped via ``max_disk_bytes`` or
@@ -56,12 +59,17 @@ class PlanService:
         self.registry = registry
         self._lock = threading.Lock()
         self._planners: dict[tuple, object] = {}
+        self._repairers: dict[int, object] = {}
         self._pool: ThreadPoolExecutor | None = None
         self._max_workers = max_workers
         self._pending: list[Future] = []
         self._warm_requested = 0
         self._warm_completed = 0
         self._warm_failed = 0
+        self._repairs = 0
+        self._repair_phase_hits = 0  # phase-local repairs served
+        self._repair_fallbacks = 0  # fell back to cold degraded resynthesis
+        self._repair_failures = 0  # FabricDegradedError raised
 
     # -- planners -----------------------------------------------------------
 
@@ -82,12 +90,60 @@ class PlanService:
             self._planners[key] = pl
             return pl
 
-    def plan(self, topo, axis_sizes: dict[str, int], kind: str, axis: str,
+    def plan(self, topo, axis_sizes: dict[str, int], kind, axis: str,
              group_index: int = 0, *, nbytes: float = 1.0, **kw):
         """One group's algorithm through the memoized planner — the main
-        serving entry point."""
+        serving entry point. ``kind`` is a collective name or a
+        :class:`repro.core.request.CollectiveRequest` (whose group the
+        planner fills in from the axis)."""
         return self.planner(topo, axis_sizes).algorithm(
             kind, axis, group_index, nbytes=nbytes, **kw)
+
+    # -- repair -------------------------------------------------------------
+
+    def repairer(self, topo, *, pipeline: str | bool = "auto"):
+        """Memoized :class:`repro.core.repair.PlanRepairer` for ``topo``,
+        bound to this service's registry."""
+        from repro.core.repair import PlanRepairer
+
+        with self._lock:
+            ent = self._repairers.get(id(topo))
+            if ent is not None and ent.topology is topo \
+                    and ent.pipeline == pipeline:
+                return ent
+            rp = PlanRepairer(topo, registry=self.registry,
+                              pipeline=pipeline)
+            self._repairers[id(topo)] = rp
+            return rp
+
+    def repair(self, topo, request, event, *, pipeline: str | bool = "auto",
+               validate: str | None = "auto"):
+        """Repair ``request`` on ``topo`` against a degradation ``event``
+        (:class:`repro.core.repair.DegradationEvent`), planning it first
+        when this service has no captured record yet. Returns the
+        :class:`repro.core.repair.RepairResult`; counts phase-local repairs
+        vs cold-resynthesis fallbacks vs loud failures in :meth:`metrics`
+        (``repair_phase_hits`` / ``repair_fallbacks`` /
+        ``repair_failures``)."""
+        from repro.core.errors import FabricDegradedError
+
+        rp = self.repairer(topo, pipeline=pipeline)
+        if not rp.recorded(request):
+            rp.plan(request)
+        with self._lock:
+            self._repairs += 1
+        try:
+            res = rp.repair(request, event, validate=validate)
+        except FabricDegradedError:
+            with self._lock:
+                self._repair_failures += 1
+            raise
+        with self._lock:
+            if res.strategy == "phases":
+                self._repair_phase_hits += 1
+            else:
+                self._repair_fallbacks += 1
+        return res
 
     # -- prefetch -----------------------------------------------------------
 
@@ -149,6 +205,10 @@ class PlanService:
                 warm_requested=self._warm_requested,
                 warm_completed=self._warm_completed,
                 warm_failed=self._warm_failed,
+                repairs=self._repairs,
+                repair_phase_hits=self._repair_phase_hits,
+                repair_fallbacks=self._repair_fallbacks,
+                repair_failures=self._repair_failures,
             )
         return out
 

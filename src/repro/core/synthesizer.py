@@ -14,6 +14,7 @@ from __future__ import annotations
 from repro.core.algorithm import CollectiveAlgorithm
 from repro.core.conditions import ChunkIds, Condition
 from repro.core.engine import SynthesisEngine, order_conditions
+from repro.core.request import CollectiveRequest
 from repro.topology.topology import Topology
 
 __all__ = [
@@ -45,27 +46,25 @@ def synthesize(
 
 def synthesize_all_gather(topo, group, *, bytes=1.0, chunks_per_npu=1,
                           ids=None, registry=None, hierarchy="auto"):
-    return SynthesisEngine(topo, registry=registry).all_gather(
-        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids,
-        hierarchy=hierarchy,
-    )
+    req = CollectiveRequest("all_gather", group=tuple(group), bytes=bytes,
+                            chunks=chunks_per_npu, hierarchy=hierarchy)
+    return SynthesisEngine(topo, registry=registry).collective(req, ids=ids)
 
 
 def synthesize_all_to_all(topo, group, *, bytes=1.0, chunks_per_pair=1,
                           ids=None, registry=None, hierarchy="auto"):
-    return SynthesisEngine(topo, registry=registry).all_to_all(
-        list(group), bytes=bytes, chunks_per_pair=chunks_per_pair, ids=ids,
-        hierarchy=hierarchy,
-    )
+    req = CollectiveRequest("all_to_all", group=tuple(group), bytes=bytes,
+                            chunks=chunks_per_pair, hierarchy=hierarchy)
+    return SynthesisEngine(topo, registry=registry).collective(req, ids=ids)
 
 
 def synthesize_reduce(
     topo: Topology, group: list[int], root: int, *,
     bytes: float = 1.0, ids: ChunkIds | None = None, registry=None,
 ) -> CollectiveAlgorithm:
-    return SynthesisEngine(topo, registry=registry).reduce(
-        list(group), root, bytes=bytes, ids=ids
-    )
+    req = CollectiveRequest("reduce", group=tuple(group), root=root,
+                            bytes=bytes)
+    return SynthesisEngine(topo, registry=registry).collective(req, ids=ids)
 
 
 def synthesize_reduce_scatter(
@@ -73,10 +72,10 @@ def synthesize_reduce_scatter(
     bytes: float = 1.0, chunks_per_npu: int = 1, ids: ChunkIds | None = None,
     registry=None, hierarchy: str = "auto",
 ) -> CollectiveAlgorithm:
-    return SynthesisEngine(topo, registry=registry).reduce_scatter(
-        list(group), bytes=bytes, chunks_per_npu=chunks_per_npu, ids=ids,
-        hierarchy=hierarchy,
-    )
+    req = CollectiveRequest("reduce_scatter", group=tuple(group),
+                            bytes=bytes, chunks=chunks_per_npu,
+                            hierarchy=hierarchy)
+    return SynthesisEngine(topo, registry=registry).collective(req, ids=ids)
 
 
 def synthesize_all_reduce(
@@ -84,10 +83,9 @@ def synthesize_all_reduce(
     bytes: float = 1.0, ids: ChunkIds | None = None, pipelined: bool = False,
     registry=None, hierarchy: str = "auto",
 ) -> CollectiveAlgorithm:
-    return SynthesisEngine(topo, registry=registry).all_reduce(
-        list(group), bytes=bytes, ids=ids, pipelined=pipelined,
-        hierarchy=hierarchy,
-    )
+    req = CollectiveRequest("all_reduce", group=tuple(group), bytes=bytes,
+                            pipelined=pipelined, hierarchy=hierarchy)
+    return SynthesisEngine(topo, registry=registry).collective(req, ids=ids)
 
 
 def synthesize_joint(

@@ -42,6 +42,7 @@ import hashlib
 import heapq
 from dataclasses import dataclass, field
 
+from repro.core.errors import PCCLError
 from repro.topology.topology import Topology
 
 __all__ = ["CommSketch", "SketchInfeasibleError", "TrafficEngineer"]
@@ -55,12 +56,13 @@ _EXACT_NODE_BUDGET = 20000
 _REFINE_ROUNDS = 64
 
 
-class SketchInfeasibleError(ValueError):
+class SketchInfeasibleError(PCCLError, ValueError):
     """A :class:`CommSketch` constraint cannot be satisfied on this fabric
     (affinity names a non-gateway, exclusions disconnect a pod pair, a port
     cap starves a demand). Deliberately NOT a ``HierarchyError``: the
     engine's auto route falls back to *flat* synthesis on ``HierarchyError``,
-    which would silently ignore the sketch."""
+    which would silently ignore the sketch (the hard end of the
+    :class:`repro.core.errors.PCCLError` fallback contract)."""
 
 
 def _norm_pairs(mapping) -> tuple:

@@ -298,19 +298,46 @@ class MeshCollectivePlanner:
         groups synthesize through that many phase levels."""
         return self.topo.partition_depth + 1
 
-    def algorithm(self, kind: str, axis: str, group_index: int = 0, *,
-                  nbytes: float = 1.0, **kw):
+    def algorithm(self, kind, axis: str, group_index: int = 0, *,
+                  nbytes: float = 1.0, ids=None, **kw):
         """The synthesized (or registry-served) algorithm for one group.
+
+        ``kind`` is either a collective name or a
+        :class:`repro.core.request.CollectiveRequest` (its ``group`` is
+        filled in from the axis; other fields pass through). The legacy
+        string form builds the same request internally from ``nbytes`` and
+        the remaining keywords (``chunks_per_npu``/``chunks_per_pair``,
+        ``hierarchy``, ``pipelined``, ``root``).
 
         ``all_gather``/``all_to_all``/``reduce_scatter``/``all_reduce``
         groups that span pods route through the hierarchical pipeline
         automatically; override with ``hierarchy="never"`` (or
         "always")."""
+        from repro.core.request import CollectiveRequest
+
+        group = self.axis_groups(axis)[group_index]
+        if isinstance(kind, CollectiveRequest):
+            if kw:
+                raise TypeError(
+                    f"pass request fields on the CollectiveRequest, not as "
+                    f"keywords: {sorted(kw)}")
+            return self.engine.collective(kind.with_group(group), ids=ids)
         if kind not in ("all_gather", "all_to_all", "all_reduce",
                         "reduce_scatter", "reduce"):
             raise ValueError(f"unknown collective kind {kind!r}")
-        group = self.axis_groups(axis)[group_index]
-        return getattr(self.engine, kind)(group, bytes=nbytes, **kw)
+        chunks = kw.pop("chunks_per_npu", None)
+        if chunks is None:
+            chunks = kw.pop("chunks_per_pair", None)
+        req_kw = {"bytes": nbytes}
+        if chunks is not None:
+            req_kw["chunks"] = chunks
+        for f in ("hierarchy", "pipelined", "root"):
+            if f in kw:
+                req_kw[f] = kw.pop(f)
+        if kw:
+            raise TypeError(f"unknown keyword(s) {sorted(kw)} for {kind}")
+        req = CollectiveRequest(kind, group=tuple(group), **req_kw)
+        return self.engine.collective(req, ids=ids)
 
     def joint(self, parts, *, name: str = "pccl_joint"):
         """Jointly synthesize several mesh-axis collectives over one shared

@@ -92,23 +92,71 @@ class StragglerMonitor:
 class FaultToleranceManager:
     """Orchestrates recovery. All side effects are injected (checkpointer,
     mesh builder, pipeline factory) so the policy is testable without
-    hardware."""
+    hardware.
+
+    When a ``plan_service`` (:class:`repro.core.planservice.PlanService`)
+    and ``topology`` are attached, the manager also re-plans the job's
+    registered collectives for the surviving fabric on failure: register
+    each :class:`repro.core.request.CollectiveRequest` the job runs via
+    :meth:`register_collective`, and :meth:`recover` (given the
+    ``degradation`` event) repairs them incrementally alongside the
+    elastic re-mesh — phase-local where the damage allows, cold degraded
+    resynthesis otherwise, and a loud
+    :class:`repro.core.errors.FabricDegradedError` when the survivors
+    cannot fulfil a collective at all."""
 
     checkpointer: object  # repro.checkpoint.Checkpointer
     planner: ElasticMeshPlanner
     make_mesh: Callable[[int, int], object]  # (data, model) -> mesh
     restarts: int = 0
     max_restarts: int = 100
+    plan_service: object | None = None  # repro.core.planservice.PlanService
+    topology: object | None = None  # the physical fabric the job runs on
+    _collectives: list = field(default_factory=list)
+    replanned: dict = field(default_factory=dict)
+
+    def register_collective(self, request) -> None:
+        """Track a collective this job depends on, for re-planning on
+        failure. Planning happens lazily at the first repair (the service
+        captures the healthy-fabric phase record then)."""
+        if not any(r.fingerprint() == request.fingerprint()
+                   for r in self._collectives):
+            self._collectives.append(request)
+
+    def replan_collectives(self, degradation, *,
+                           validate: str | None = "auto") -> dict:
+        """Repair every registered collective against ``degradation``
+        (:class:`repro.core.repair.DegradationEvent`) on the surviving
+        fabric; returns {request fingerprint: RepairResult} and keeps it
+        on ``self.replanned``. A FabricDegradedError propagates — a job
+        whose collective cannot be fulfilled must not resume on a silently
+        broken schedule."""
+        if self.plan_service is None or self.topology is None:
+            raise RuntimeError(
+                "collective re-planning needs plan_service= and topology=")
+        out = {}
+        for req in self._collectives:
+            out[req.fingerprint()] = self.plan_service.repair(
+                self.topology, req, degradation, validate=validate)
+        self.replanned = out
+        return out
 
     def recover(self, template: dict, surviving_chips: int,
-                shardings_for_mesh: Callable[[object], dict]):
+                shardings_for_mesh: Callable[[object], dict],
+                degradation=None):
         """Failure path: plan a new mesh from survivors, restore the newest
         checkpoint resharded onto it, and report the step to resume from.
+        With a ``degradation`` event (and an attached plan service), the
+        registered collectives are re-planned for the surviving fabric
+        first — so an unfulfillable fabric fails loudly before any restore
+        work happens.
 
         Returns (step, state, mesh)."""
         self.restarts += 1
         if self.restarts > self.max_restarts:
             raise RuntimeError("restart budget exhausted")
+        if degradation is not None and self._collectives:
+            self.replan_collectives(degradation)
         data, model = self.planner.plan(surviving_chips)
         mesh = self.make_mesh(data, model)
         shardings = shardings_for_mesh(mesh)

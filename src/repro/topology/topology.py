@@ -171,7 +171,8 @@ class Topology:
         for attr in ("_structure_hash", "_automorphism_closure",
                      "_pccl_engines", "_csr_cache", "_rev_dist_rows",
                      "_adjh_rows", "_bfs_scratch", "_hop_matrix_cache",
-                     "_pod_views", "_rev_cache", "_partition_fp"):
+                     "_pod_views", "_rev_cache", "_partition_fp",
+                     "_degraded_views"):
             if hasattr(self, attr):
                 delattr(self, attr)
 
@@ -651,6 +652,52 @@ class Topology:
             frontier = nxt
         rows[dst] = dist
         return dist
+
+    def degraded(self, failed_links=(), failed_npus=()) -> TopologyView:
+        """The surviving fabric after losing ``failed_links`` (link ids)
+        and/or ``failed_npus`` (node ids): a :class:`TopologyView` whose
+        topology keeps *every* node — dead devices stay as isolated nodes,
+        so node ids are stable across degradation (``view.nodes`` is the
+        identity) — and drops the failed links plus every link incident to
+        a failed node (``view.links`` maps surviving local link ids back to
+        this fabric's).
+
+        The view's topology carries the full partition tree and the
+        declared automorphism generators: an *undamaged* pod of the
+        degraded fabric extracts to a sub-topology byte-identical to the
+        original pod's (same nodes, surviving links in the same relative
+        order), so registry entries synthesized on the healthy fabric keep
+        serving the undamaged pods of the degraded one — the property
+        incremental plan repair (:mod:`repro.core.repair`) relies on.
+        Generators broken by the damage are filtered out by the registry's
+        per-use verification, degrading sharing, never correctness.
+
+        Memoized per (failed links, failed npus) set pair; mutation of the
+        fabric drops the memo."""
+        fl = frozenset(int(l) for l in failed_links)
+        fn = frozenset(int(n) for n in failed_npus)
+        for l in fl:
+            if not 0 <= l < self.num_links:
+                raise ValueError(f"unknown link id {l}")
+        for n in fn:
+            if not 0 <= n < self.num_nodes:
+                raise ValueError(f"unknown node id {n}")
+        views = getattr(self, "_degraded_views", None)
+        if views is None:
+            views = self._degraded_views = {}
+        got = views.get((fl, fn))
+        if got is not None:
+            return got
+        keep = [l.id for l in self.links
+                if l.id not in fl and l.src not in fn and l.dst not in fn]
+        got = self._extract(range(self.num_nodes), keep,
+                            f"{self.name}_degraded")
+        sub = got.topology
+        sub.automorphism_generators = list(self.automorphism_generators)
+        if self._pod_paths is not None:
+            sub.set_partition(list(self._pod_paths))
+        views[(fl, fn)] = got
+        return got
 
     def reversed(self) -> "Topology":
         """The link-reversed view (used for reduction synthesis), memoized.

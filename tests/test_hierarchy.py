@@ -8,6 +8,7 @@ import pytest
 from repro.core import (
     AlgorithmRegistry,
     ChunkIds,
+    CollectiveRequest,
     Condition,
     HierarchicalSynthesizer,
     HierarchyError,
@@ -126,7 +127,8 @@ class TestDifferentialEquivalence:
     def test_chunk_delivery_equivalence(self, fabric, kind):
         eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
         hier = getattr(eng, kind)(fabric.npus)
-        flat = getattr(eng, kind)(fabric.npus, hierarchy="never")
+        flat = eng.collective(CollectiveRequest(
+            kind, group=tuple(fabric.npus), hierarchy="never"))
         assert hier.name.startswith("pccl_hier")
         hier.validate()  # every chunk delivered per its conditions
         flat.validate()
@@ -139,7 +141,8 @@ class TestDifferentialEquivalence:
     def test_makespan_within_bound(self, fabric, kind):
         eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
         hier = getattr(eng, kind)(fabric.npus)
-        flat = getattr(eng, kind)(fabric.npus, hierarchy="never")
+        flat = eng.collective(CollectiveRequest(
+            kind, group=tuple(fabric.npus), hierarchy="never"))
         assert hier.makespan <= _MAKESPAN_BOUND * flat.makespan, (
             f"{kind}: hierarchical {hier.makespan} vs flat {flat.makespan}"
         )
@@ -268,7 +271,8 @@ class TestHierarchicalReductions:
             for d in c.dests:
                 assert holdings[(d, c.chunk)] == full[c.chunk]
         # same ownership contract as the flat route
-        flat = eng.reduce_scatter(fabric.npus, hierarchy="never")
+        flat = eng.collective(CollectiveRequest(
+            "reduce_scatter", group=tuple(fabric.npus), hierarchy="never"))
         assert flat.name == "pccl_reduce_scatter"
         flat.validate(mode="oracle")
         key = lambda a: sorted(
@@ -294,7 +298,8 @@ class TestHierarchicalReductions:
     def test_makespan_not_worse_than_flat(self, fabric, kind):
         eng = SynthesisEngine(fabric, registry=AlgorithmRegistry())
         hier = getattr(eng, kind)(fabric.npus)
-        flat = getattr(eng, kind)(fabric.npus, hierarchy="never")
+        flat = eng.collective(CollectiveRequest(
+            kind, group=tuple(fabric.npus), hierarchy="never"))
         assert hier.makespan <= flat.makespan, (
             f"{kind}: hierarchical {hier.makespan} vs flat {flat.makespan}")
 
@@ -433,7 +438,8 @@ class TestHierarchyAlwaysPolicy:
         for kind in ("all_gather", "all_to_all", "reduce_scatter",
                      "all_reduce"):
             with pytest.raises(HierarchyError, match="no partition"):
-                getattr(eng, kind)(list(range(8)), hierarchy="always")
+                eng.collective(CollectiveRequest(
+                    kind, group=tuple(range(8)), hierarchy="always"))
 
     def test_always_not_served_cached_auto_fallback(self):
         """An auto call that fell back to flat must not satisfy a later
@@ -445,4 +451,5 @@ class TestHierarchyAlwaysPolicy:
         auto = eng.reduce_scatter(group)  # in-forest guard -> flat fallback
         assert auto.name == "pccl_reduce_scatter"
         with pytest.raises(HierarchyError):
-            eng.reduce_scatter(group, hierarchy="always")
+            eng.collective(CollectiveRequest(
+                "reduce_scatter", group=tuple(group), hierarchy="always"))

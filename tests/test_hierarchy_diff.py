@@ -20,7 +20,7 @@ their equivalence systematically instead of by spot checks:
 import pytest
 
 from repro.core import (AlgorithmRegistry, CollectiveAlgorithm,
-                        SynthesisEngine, replay_algorithm)
+                        CollectiveRequest, SynthesisEngine, replay_algorithm)
 from repro.core.conditions import Condition, ReduceCondition
 from repro.core.hierarchy import HierarchicalSynthesizer, HierarchyError
 from repro.topology import multi_pod, three_level, two_level_switch
@@ -57,12 +57,14 @@ def _routes(eng, kind, group):
     (e.g. reductions on shared-device fabrics) — the equivalence claims
     hold either way."""
     routes = {
-        "flat": getattr(eng, kind)(group, hierarchy="never"),
+        "flat": eng.collective(
+            CollectiveRequest(kind, group=tuple(group), hierarchy="never")),
         "hier": getattr(eng, kind)(group),  # auto: pipelined where safe
     }
     if kind == "all_reduce":
-        routes["flat_pipelined"] = eng.all_reduce(
-            group, pipelined=True, hierarchy="never")
+        routes["flat_pipelined"] = eng.collective(CollectiveRequest(
+            "all_reduce", group=tuple(group), pipelined=True,
+            hierarchy="never"))
     # the sequential (registry-shareable) hierarchical regime
     h = HierarchicalSynthesizer(SynthesisEngine(eng.topology,
                                                 registry=eng.registry))
@@ -258,7 +260,8 @@ class TestPipelinedAllReduceJunction:
         except HierarchyError:
             # shared-device boundaries fail the in-forest guard: the
             # engine route resolves the fallback; flat is the reference
-            barrier = eng.all_reduce(topo.npus, hierarchy="never")
+            barrier = eng.collective(CollectiveRequest(
+                "all_reduce", group=tuple(topo.npus), hierarchy="never"))
         try:
             pipe = h.all_reduce(topo.npus, pipeline=True)
         except HierarchyError:

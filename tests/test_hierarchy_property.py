@@ -23,7 +23,7 @@ import random
 
 import pytest
 
-from repro.core import AlgorithmRegistry, SynthesisEngine
+from repro.core import AlgorithmRegistry, CollectiveRequest, SynthesisEngine
 from repro.core.algorithm import CollectiveAlgorithm, Transfer
 from repro.core.conditions import Condition
 from repro.core.hierarchy import HierarchyError
@@ -116,7 +116,8 @@ def check_synthesis_seed(seed: int) -> None:
         hier.validate(mode="oracle")
     auto = getattr(eng, kind)(group)  # auto route: hier or flat fallback
     auto.validate(mode="oracle")
-    flat = getattr(eng, kind)(group, hierarchy="never")
+    flat = eng.collective(
+        CollectiveRequest(kind, group=tuple(group), hierarchy="never"))
     key = lambda a: sorted(
         (c.chunk, tuple(sorted(getattr(c, "srcs", [getattr(c, "src", -1)]))),
          tuple(sorted(c.dests)))

@@ -7,7 +7,8 @@ import sys
 
 import pytest
 
-from repro.core import AlgorithmRegistry, PlanService, SynthesisEngine
+from repro.core import (AlgorithmRegistry, CollectiveRequest, PlanService,
+                        SynthesisEngine)
 from repro.topology import torus2d
 
 AXES = {"data": 4, "model": 4}
@@ -89,7 +90,7 @@ class TestPlanService:
 # the worker.
 _STRESS_WORKER = """
 import os, sys
-from repro.core import AlgorithmRegistry, SynthesisEngine
+from repro.core import AlgorithmRegistry, CollectiveRequest, SynthesisEngine
 from repro.topology import torus2d
 
 cache, role, iters = sys.argv[1], sys.argv[2], int(sys.argv[3])
@@ -107,7 +108,8 @@ for i in range(iters):
     reg = AlgorithmRegistry(cache_dir=cache)
     eng = SynthesisEngine(topo, registry=reg)
     nbytes = float(i % 2 + 1)
-    alg = eng.all_gather(rows[i % 4], bytes=nbytes)
+    alg = eng.collective(CollectiveRequest(
+        "all_gather", group=tuple(rows[i % 4]), bytes=nbytes))
     alg.validate()
     key = nbytes
     if key in expected:
@@ -150,7 +152,8 @@ class TestDiskEviction:
         before = {f for f in os.listdir(reg.cache_dir)
                   if f.endswith(".npz")}
         eng = SynthesisEngine(torus2d(4, 4), registry=reg)
-        eng.all_gather(list(range(16)), bytes=nbytes)
+        eng.collective(CollectiveRequest(
+            "all_gather", group=tuple(range(16)), bytes=nbytes))
         after = {f for f in os.listdir(reg.cache_dir)
                  if f.endswith(".npz")}
         new = after - before
@@ -228,7 +231,8 @@ class TestDiskEviction:
         # the dir is still serviceable: a fresh tenant loads what survived
         reg2 = AlgorithmRegistry(cache_dir=str(tmp_path))
         eng = SynthesisEngine(torus2d(4, 4), registry=reg2)
-        eng.all_gather(list(range(16)), bytes=3.0).validate()
+        eng.collective(CollectiveRequest(
+            "all_gather", group=tuple(range(16)), bytes=3.0)).validate()
 
     def test_metrics_expose_disk_eviction_counters(self, tmp_path):
         svc = PlanService(cache_dir=str(tmp_path), max_disk_bytes=1 << 40)

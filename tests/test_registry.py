@@ -8,6 +8,7 @@ import pytest
 from repro.core import (
     AlgorithmRegistry,
     ChunkIds,
+    CollectiveRequest,
     SynthesisEngine,
     all_gather,
     all_to_all,
@@ -137,7 +138,9 @@ class TestRegistry:
         reg = AlgorithmRegistry()
         eng = SynthesisEngine(topo, registry=reg)
         eng.all_gather(torus_rows(4, 4)[0])
-        eng.all_gather(torus_rows(4, 4)[0], bytes=2.0)  # different params
+        eng.collective(CollectiveRequest(
+            "all_gather", group=tuple(torus_rows(4, 4)[0]),
+            bytes=2.0))  # different params
         eng.all_to_all(torus_rows(4, 4)[0])  # different kind
         eng.all_gather([0, 5, 10, 15])  # diagonal: different canonical group
         assert reg.stats.misses == 4
@@ -148,9 +151,11 @@ class TestRegistry:
         eng = SynthesisEngine(topo, registry=reg)
         rows = torus_rows(4, 4)
         cold_rs = eng.reduce_scatter(rows[0])
-        cold_ar = eng.all_reduce(rows[0], pipelined=True)
+        cold_ar = eng.collective(CollectiveRequest(
+            "all_reduce", group=tuple(rows[0]), pipelined=True))
         hit_rs = eng.reduce_scatter(rows[3])
-        hit_ar = eng.all_reduce(rows[3], pipelined=True)
+        hit_ar = eng.collective(CollectiveRequest(
+            "all_reduce", group=tuple(rows[3]), pipelined=True))
         for alg in (cold_rs, cold_ar, hit_rs, hit_ar):
             alg.validate()
         assert hit_rs.makespan == cold_rs.makespan

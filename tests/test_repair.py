@@ -1,0 +1,412 @@
+"""Fault-aware incremental plan repair: PlanRepairer, PlanService.repair,
+and the FaultToleranceManager wiring.
+
+The contract under test (see ``repro/core/repair.py``): a repaired plan
+fulfils, on the surviving fabric, exactly the per-chunk conditions a cold
+degraded-fabric synthesis would — validated end to end — or the repair
+raises :class:`FabricDegradedError` loudly. Strategy provenance rides on
+the :class:`RepairResult`: phase-local repair keeps undamaged phases
+verbatim and re-synthesizes only the damaged ones; anything the phase
+record cannot express falls back to cold resynthesis through the shared
+registry.
+"""
+
+import pytest
+
+from repro.core import (
+    AlgorithmRegistry,
+    CollectiveRequest,
+    DamageReport,
+    DegradationEvent,
+    FabricDegradedError,
+    PlanRepairer,
+    PlanService,
+    SynthesisEngine,
+)
+from repro.core.algorithm import CollectiveAlgorithm, Transfer
+from repro.core.conditions import ReduceCondition
+from repro.runtime.fault_tolerance import (
+    ElasticMeshPlanner,
+    FaultToleranceManager,
+)
+from repro.topology import multi_pod, ring, three_level
+
+
+def _delivery(alg):
+    out = []
+    for c in alg.conditions:
+        if isinstance(c, ReduceCondition):
+            out.append((c.chunk, tuple(sorted(c.srcs)),
+                        tuple(sorted(c.dests))))
+        else:
+            out.append((c.chunk, c.src, tuple(sorted(c.dests))))
+    return sorted(out)
+
+
+def _internal_link(topo, pod: int) -> int:
+    """A non-boundary link with both endpoints inside ``pod``."""
+    members = set(topo.pods()[pod])
+    boundary = {l.id for l in topo.boundary_links()}
+    for l in topo.links:
+        if l.id not in boundary and l.src in members and l.dst in members:
+            return l.id
+    raise AssertionError("no internal link found")
+
+
+def _cold_degraded(topo, req, event):
+    """Reference: cold synthesis on the surviving fabric, fresh registry."""
+    dtopo = topo.degraded(event.failed_links, event.failed_npus).topology
+    eng = SynthesisEngine(dtopo, registry=AlgorithmRegistry())
+    return eng.collective(req)
+
+
+class TestDegradedView:
+    def test_node_ids_stable_links_dropped(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        dead_link = _internal_link(topo, 0)
+        view = topo.degraded([dead_link], [])
+        assert list(view.nodes) == list(range(topo.num_nodes))
+        assert dead_link not in view.links
+        assert len(view.links) == topo.num_links - 1
+        assert view.topology.partition is not None
+
+    def test_failed_npu_drops_incident_links(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        victim = topo.pods()[0][0]
+        incident = [l.id for l in topo.links
+                    if l.src == victim or l.dst == victim]
+        view = topo.degraded([], [victim])
+        assert not set(incident) & set(view.links)
+        assert len(view.links) == topo.num_links - len(incident)
+
+    def test_memoized_per_event(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        assert topo.degraded([0], []) is topo.degraded([0], [])
+        assert topo.degraded([0], []) is not topo.degraded([1], [])
+
+    def test_unknown_link_rejected(self):
+        topo = ring(4)
+        with pytest.raises(ValueError, match="link"):
+            topo.degraded([topo.num_links + 7], [])
+
+
+class TestDamageClassification:
+    @pytest.fixture(scope="class")
+    def repairer(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        return PlanRepairer(topo, registry=AlgorithmRegistry())
+
+    def test_pod_internal_link(self, repairer):
+        ev = DegradationEvent(
+            failed_links=[_internal_link(repairer.topology, 1)])
+        rep = repairer.classify(ev)
+        assert rep == DamageReport(pod_internal=(1,))
+
+    def test_boundary_link(self, repairer):
+        ev = DegradationEvent(
+            failed_links=[repairer.topology.boundary_links()[0].id])
+        assert repairer.classify(ev).boundary
+
+    def test_gateway_vs_plain_member(self, repairer):
+        topo = repairer.topology
+        gw = topo.gateways(0)[0]
+        plain = next(n for n in topo.pods()[0] if n not in topo.gateways(0))
+        assert repairer.classify(
+            DegradationEvent(failed_npus=[gw])).gateway_loss == (0,)
+        assert repairer.classify(
+            DegradationEvent(failed_npus=[plain])).pod_internal == (0,)
+
+    def test_unpartitioned_fabric(self):
+        rp = PlanRepairer(ring(4), registry=AlgorithmRegistry())
+        assert rp.classify(DegradationEvent(failed_links=[0])).unpartitioned
+        assert not rp.classify(DegradationEvent()).unpartitioned
+
+    def test_event_normalizes_and_fingerprints(self):
+        a = DegradationEvent(failed_links=[3, 1, 3], failed_npus=[2])
+        assert a.failed_links == (1, 3) and bool(a)
+        assert not DegradationEvent()
+        assert a.fingerprint() != DegradationEvent(
+            failed_links=[1]).fingerprint()
+
+
+class TestRepairStrategies:
+    @pytest.fixture(scope="class")
+    def planned(self):
+        topo = multi_pod(2, 4, 8, unit_links=True)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry(),
+                          pipeline=False)
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        rp.plan(req)
+        return topo, rp, req
+
+    def test_pod_internal_link_repairs_phase_locally(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        res = rp.repair(req, ev)
+        assert res.strategy == "phases"
+        assert res.phases_kept >= 1 and res.phases_resynthesized >= 1
+        assert res.report.pod_internal == (0,)
+        # the repaired plan lives on the degraded fabric and validates
+        # under both the bulk path and the reference oracle
+        assert res.algorithm.topology is res.view.topology
+        res.algorithm.validate(mode="bulk")
+        res.algorithm.validate(mode="oracle")
+        # identical per-chunk final conditions to a cold degraded synthesis
+        assert _delivery(res.algorithm) == _delivery(
+            _cold_degraded(topo, req, ev))
+
+    def test_repair_serves_undamaged_pods_from_registry(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 1)])
+        hits_before = rp.registry.stats.hits
+        res = rp.repair(req, ev)
+        assert res.strategy == "phases"
+        # the undamaged pod's phase came back from the shared registry —
+        # that sharing is the repair speedup, not an optimization detail
+        assert rp.registry.stats.hits > hits_before
+
+    def test_boundary_link_still_fulfils_cold_conditions(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(
+            failed_links=[topo.boundary_links()[0].id])
+        res = rp.repair(req, ev)
+        res.algorithm.validate()
+        assert _delivery(res.algorithm) == _delivery(
+            _cold_degraded(topo, req, ev))
+
+    def test_dead_member_shrinks_group(self, planned):
+        topo, rp, req = planned
+        victim = next(n for n in topo.pods()[0]
+                      if n not in topo.gateways(0))
+        ev = DegradationEvent(failed_npus=[victim])
+        res = rp.repair(req, ev)
+        assert victim not in res.request.group
+        assert len(res.request.group) == len(req.group) - 1
+        res.algorithm.validate()
+        touched = {res.algorithm.topology.links[t.link].src
+                   for t in res.algorithm.transfers} | \
+                  {res.algorithm.topology.links[t.link].dst
+                   for t in res.algorithm.transfers}
+        assert victim not in touched
+        assert _delivery(res.algorithm) == _delivery(_cold_degraded(
+            topo, res.request, ev))
+
+    def test_gateway_loss_falls_back_but_stays_correct(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(failed_npus=[topo.gateways(0)[0]])
+        res = rp.repair(req, ev)  # survivable: pod 0 has more gateways
+        assert res.strategy == "resynth"
+        res.algorithm.validate()
+
+    def test_unplanned_request_repairs_by_resynthesis(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry())
+        req = CollectiveRequest("reduce_scatter", group=tuple(topo.npus))
+        assert not rp.recorded(req)
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        res = rp.repair(req, ev)
+        assert res.strategy == "resynth"
+        res.algorithm.validate()
+        assert _delivery(res.algorithm) == _delivery(
+            _cold_degraded(topo, req, ev))
+
+    def test_sole_gateway_loss_raises_loudly(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=1)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        rp.plan(req)
+        ev = DegradationEvent(failed_npus=[topo.gateways(0)[0]])
+        with pytest.raises(FabricDegradedError):
+            rp.repair(req, ev)
+
+    def test_cutting_every_boundary_link_raises(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        ev = DegradationEvent(
+            failed_links=[l.id for l in topo.boundary_links()])
+        with pytest.raises(FabricDegradedError):
+            rp.repair(req, ev)
+
+    def test_dead_reduce_root_raises(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry())
+        root = topo.npus[0]
+        req = CollectiveRequest("reduce", group=tuple(topo.npus), root=root)
+        with pytest.raises(FabricDegradedError, match="root"):
+            rp.repair(req, DegradationEvent(failed_npus=[root]))
+
+    def test_validate_none_skips_validation_not_feasibility(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        res = rp.repair(req, ev, validate=None)
+        res.algorithm.validate()  # still a correct plan, just unvalidated
+        cut = DegradationEvent(
+            failed_links=[l.id for l in topo.boundary_links()])
+        with pytest.raises(FabricDegradedError):
+            rp.repair(req, cut, validate=None)
+
+    def test_single_transfer_corruption_flips_validation(self, planned):
+        topo, rp, req = planned
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        alg = rp.repair(req, ev).algorithm
+        ts = list(alg.transfers)
+        t = ts[len(ts) // 2]
+        ts[len(ts) // 2] = Transfer(t.chunk, t.link, t.src, t.dst,
+                                    t.start, t.end + 0.5, t.reduce)
+        bad = CollectiveAlgorithm(alg.topology, list(alg.conditions), ts,
+                                  name=alg.name)
+        with pytest.raises((ValueError, AssertionError)):
+            bad.validate(mode="bulk")
+
+    def test_nested_fabric_repairs_phase_locally(self):
+        topo = three_level(2, 2, 3, unit_links=True)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry(),
+                          pipeline=False)
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        rp.plan(req)
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        res = rp.repair(req, ev)
+        assert res.strategy == "phases"
+        res.algorithm.validate(mode="oracle")
+        assert _delivery(res.algorithm) == _delivery(
+            _cold_degraded(topo, req, ev))
+
+    def test_nested_compositions_captured_for_recursive_repair(self):
+        topo = three_level(2, 2, 3, unit_links=True)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry(),
+                          pipeline=False)
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        rp.plan(req)
+        _, record, sub = rp._records[req.fingerprint()]
+        assert sub, "nested pod compositions were not captured"
+        # registry-hit pods share the canonical pod's algorithm object, so
+        # every pod-level phase finds its nested record by identity — the
+        # match that lets a rack failure re-synthesize one rack instead of
+        # re-spanning the whole pod
+        for ph in record.phases:
+            if ph.name == "inter":
+                continue
+            assert any(res is ph.algorithm for res, _ in sub), ph.name
+
+
+@pytest.mark.slow
+class TestRepairAtScale:
+    def test_single_link_repair_512_npus(self):
+        """The acceptance scenario: single rack-internal link loss on a
+        512-NPU three-level All-Gather repairs phase-locally, fulfils the
+        cold plan's conditions exactly, and is decisively faster than cold
+        degraded-fabric resynthesis. The timing bound here is a
+        conservative 3x so machine jitter cannot flake the suite; the
+        committed ``fig_repair_512`` bench row records the >=5x headline."""
+        import time
+
+        topo = three_level(8, 8, 8, unit_links=True)
+        rp = PlanRepairer(topo, registry=AlgorithmRegistry(),
+                          pipeline=False)
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        rp.plan(req)
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        t0 = time.perf_counter()
+        res = rp.repair(req, ev, validate=None)
+        repair_s = time.perf_counter() - t0
+        assert res.strategy == "phases"
+        assert res.phases_kept > res.phases_resynthesized
+
+        cold_topo = three_level(8, 8, 8, unit_links=True)
+        dtopo = cold_topo.degraded(ev.failed_links, ev.failed_npus).topology
+        ceng = SynthesisEngine(dtopo, registry=AlgorithmRegistry())
+        t0 = time.perf_counter()
+        cold = ceng.collective(req)
+        cold_s = time.perf_counter() - t0
+
+        res.algorithm.validate()
+        cold.validate()
+        assert _delivery(res.algorithm) == _delivery(cold)
+        assert cold_s / repair_s >= 3.0, (
+            f"repair {repair_s:.3f}s vs cold {cold_s:.3f}s")
+
+
+class TestPlanServiceRepair:
+    def test_repair_counts_phase_hits_and_plans_lazily(self):
+        topo = multi_pod(2, 4, 8, unit_links=True)
+        svc = PlanService(registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        res = svc.repair(topo, req, ev, pipeline=False)
+        assert res.strategy == "phases"
+        m = svc.metrics()
+        assert m["repairs"] == 1 and m["repair_phase_hits"] == 1
+        assert m["repair_fallbacks"] == 0 and m["repair_failures"] == 0
+
+    def test_repair_failure_counted_and_raised(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        svc = PlanService(registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        ev = DegradationEvent(
+            failed_links=[l.id for l in topo.boundary_links()])
+        with pytest.raises(FabricDegradedError):
+            svc.repair(topo, req, ev)
+        m = svc.metrics()
+        assert m["repair_failures"] == 1 and m["repair_phase_hits"] == 0
+
+
+class _FakeCheckpointer:
+    def __init__(self):
+        self.restores = 0
+
+    def restore(self, template, shardings=None):
+        self.restores += 1
+        return 7, {"w": 1}
+
+
+class TestFaultToleranceWiring:
+    def _manager(self, topo, svc=None):
+        return FaultToleranceManager(
+            checkpointer=_FakeCheckpointer(),
+            planner=ElasticMeshPlanner(model_degree=4),
+            make_mesh=lambda d, m: (d, m),
+            plan_service=svc, topology=topo)
+
+    def test_register_dedups_by_fingerprint(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        ftm = self._manager(topo)
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        ftm.register_collective(req)
+        ftm.register_collective(
+            CollectiveRequest("all_gather", group=tuple(topo.npus)))
+        assert len(ftm._collectives) == 1
+
+    def test_replan_needs_service_and_topology(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        ftm = self._manager(topo, svc=None)
+        ftm.register_collective(
+            CollectiveRequest("all_gather", group=tuple(topo.npus)))
+        with pytest.raises(RuntimeError, match="plan_service"):
+            ftm.replan_collectives(DegradationEvent(failed_links=[0]))
+
+    def test_recover_replans_registered_collectives(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        ftm = self._manager(topo, svc=PlanService(
+            registry=AlgorithmRegistry()))
+        req = CollectiveRequest("all_gather", group=tuple(topo.npus))
+        ftm.register_collective(req)
+        ev = DegradationEvent(failed_links=[_internal_link(topo, 0)])
+        step, state, mesh = ftm.recover(
+            {}, len(topo.npus), lambda mesh: {}, degradation=ev)
+        assert step == 7 and mesh == (len(topo.npus) // 4, 4)
+        assert req.fingerprint() in ftm.replanned
+        ftm.replanned[req.fingerprint()].algorithm.validate()
+
+    def test_unfulfillable_fabric_fails_before_restore(self):
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        ftm = self._manager(topo, svc=PlanService(
+            registry=AlgorithmRegistry()))
+        ftm.register_collective(
+            CollectiveRequest("all_gather", group=tuple(topo.npus)))
+        cut = DegradationEvent(
+            failed_links=[l.id for l in topo.boundary_links()])
+        with pytest.raises(FabricDegradedError):
+            ftm.recover({}, len(topo.npus), lambda mesh: {},
+                        degradation=cut)
+        assert ftm.checkpointer.restores == 0

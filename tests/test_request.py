@@ -1,0 +1,230 @@
+"""The CollectiveRequest API redesign and the unified PCCLError surface.
+
+Three contracts:
+
+1. **Validation.** A :class:`CollectiveRequest` is a frozen value object
+   that rejects malformed descriptions at construction (unknown kind,
+   non-positive bytes, root on a non-reduce, ...), so every downstream
+   layer can trust a request it receives.
+2. **Equivalence.** The legacy per-call kwargs and the request form
+   produce bit-identical schedules through the *same* registry entries —
+   the redesign changes the call surface, not the plans — and explicitly
+   passing a legacy tuning kwarg warns :class:`PCCLDeprecationWarning`
+   (escalated to an error for repro-internal call sites by pyproject).
+3. **Error surface.** Every domain error derives from :class:`PCCLError`,
+   and the silent flat-fallback rules hold: ``HierarchyError`` is advisory
+   (the auto route may fall back flat), ``SketchInfeasibleError`` and
+   ``FabricDegradedError`` are hard (no fallback may swallow them).
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmRegistry,
+    CollectiveRequest,
+    FabricDegradedError,
+    HierarchyError,
+    PCCLDeprecationWarning,
+    PCCLError,
+    SketchInfeasibleError,
+    SynthesisEngine,
+    synthesize_all_gather,
+    synthesize_all_to_all,
+)
+from repro.topology import multi_pod, ring, torus2d
+
+LEGACY_OK = "ignore::repro.core.request.PCCLDeprecationWarning"
+
+
+def _same_schedule(a, b) -> bool:
+    ca, cb = a.columns, b.columns
+    return all(
+        np.array_equal(getattr(ca, f), getattr(cb, f))
+        for f in ("chunk", "link", "src", "dst", "start", "end", "reduce"))
+
+
+class TestRequestValidation:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            CollectiveRequest("all_gatherr", group=(0, 1))
+
+    def test_nonpositive_bytes_rejected(self):
+        with pytest.raises(ValueError, match="bytes"):
+            CollectiveRequest("all_gather", group=(0, 1), bytes=0.0)
+
+    def test_chunks_below_one_rejected(self):
+        with pytest.raises(ValueError, match="chunks"):
+            CollectiveRequest("all_gather", group=(0, 1), chunks=0)
+
+    def test_bad_hierarchy_rejected(self):
+        with pytest.raises(ValueError, match="hierarchy"):
+            CollectiveRequest("all_gather", group=(0, 1), hierarchy="maybe")
+
+    def test_reduce_requires_root_in_group(self):
+        with pytest.raises(ValueError, match="root"):
+            CollectiveRequest("reduce", group=(0, 1))
+        with pytest.raises(ValueError, match="root"):
+            CollectiveRequest("reduce", group=(0, 1), root=7)
+        req = CollectiveRequest("reduce", group=(0, 1), root=1)
+        assert req.root == 1
+
+    def test_root_on_non_reduce_rejected(self):
+        with pytest.raises(ValueError, match="root"):
+            CollectiveRequest("all_gather", group=(0, 1), root=0)
+
+    def test_pipelined_only_for_all_reduce(self):
+        with pytest.raises(ValueError, match="pipelined"):
+            CollectiveRequest("all_gather", group=(0, 1), pipelined=True)
+        CollectiveRequest("all_reduce", group=(0, 1), pipelined=True)
+
+    def test_sketch_must_quack(self):
+        with pytest.raises(TypeError, match="sketch"):
+            CollectiveRequest("all_gather", group=(0, 1), sketch=object())
+
+    def test_frozen_and_group_normalized(self):
+        req = CollectiveRequest("all_gather",
+                                group=np.asarray([2, 0, 1], np.int64))
+        assert req.group == (2, 0, 1)
+        assert all(type(n) is int for n in req.group)
+        with pytest.raises(AttributeError):
+            req.bytes = 2.0
+
+    def test_with_group_binds_without_mutation(self):
+        base = CollectiveRequest("all_gather", bytes=2.0)
+        bound = base.with_group([3, 4, 5])
+        assert base.group == () and bound.group == (3, 4, 5)
+        assert bound.bytes == 2.0
+
+    def test_fingerprint_identity(self):
+        a = CollectiveRequest("all_gather", group=(0, 1), bytes=2.0)
+        b = CollectiveRequest("all_gather", group=(0, 1), bytes=2.0)
+        c = CollectiveRequest("all_gather", group=(0, 1), bytes=3.0)
+        assert a.fingerprint() == b.fingerprint()
+        assert a.fingerprint() != c.fingerprint()
+        assert a.fingerprint() != a.with_group((0, 2)).fingerprint()
+
+
+class TestLegacyShimEquivalence:
+    """Old kwargs and new requests must be two spellings of one plan."""
+
+    @pytest.mark.filterwarnings(LEGACY_OK)
+    def test_all_gather_same_registry_entry_and_columns(self):
+        reg = AlgorithmRegistry()
+        eng = SynthesisEngine(torus2d(4, 4), registry=reg)
+        legacy = eng.all_gather(list(range(4)), bytes=2.0, chunks_per_npu=2)
+        misses = reg.stats.misses
+        new = eng.collective(CollectiveRequest(
+            "all_gather", group=tuple(range(4)), bytes=2.0, chunks=2))
+        assert reg.stats.misses == misses, "request form missed the cache"
+        assert reg.stats.hits >= 1
+        assert _same_schedule(legacy, new)
+
+    @pytest.mark.filterwarnings(LEGACY_OK)
+    def test_pipelined_all_reduce_equivalent(self):
+        reg = AlgorithmRegistry()
+        eng = SynthesisEngine(torus2d(4, 4), registry=reg)
+        legacy = eng.all_reduce(list(range(4)), pipelined=True)
+        misses = reg.stats.misses
+        new = eng.collective(CollectiveRequest(
+            "all_reduce", group=tuple(range(4)), pipelined=True))
+        assert reg.stats.misses == misses
+        assert _same_schedule(legacy, new)
+
+    def test_reduce_request_carries_root(self):
+        reg = AlgorithmRegistry()
+        eng = SynthesisEngine(torus2d(4, 4), registry=reg)
+        legacy = eng.reduce(list(range(4)), 2)
+        new = eng.collective(CollectiveRequest(
+            "reduce", group=tuple(range(4)), root=2))
+        assert _same_schedule(legacy, new)
+
+    def test_explicit_legacy_kwarg_warns(self):
+        eng = SynthesisEngine(torus2d(4, 4), registry=AlgorithmRegistry())
+        with pytest.warns(PCCLDeprecationWarning, match="deprecated"):
+            eng.all_gather(list(range(4)), bytes=2.0)
+
+    def test_bare_named_call_stays_silent_sugar(self):
+        eng = SynthesisEngine(torus2d(4, 4), registry=AlgorithmRegistry())
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            eng.all_gather(list(range(4))).validate()
+
+    def test_module_wrappers_are_warning_free(self):
+        topo = torus2d(4, 4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            synthesize_all_gather(topo, list(range(4)),
+                                  chunks_per_npu=2).validate()
+            synthesize_all_to_all(topo, list(range(4)),
+                                  chunks_per_pair=2,
+                                  hierarchy="never").validate()
+
+    def test_request_of_wrong_kind_rejected_by_named_method(self):
+        eng = SynthesisEngine(torus2d(4, 4), registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_to_all", group=tuple(range(4)))
+        with pytest.raises(ValueError, match="all_to_all"):
+            eng.all_gather(req)
+
+    def test_request_plus_kwargs_rejected(self):
+        eng = SynthesisEngine(torus2d(4, 4), registry=AlgorithmRegistry())
+        req = CollectiveRequest("all_gather", group=tuple(range(4)))
+        with pytest.raises(TypeError, match="CollectiveRequest"):
+            eng.all_gather(req, bytes=2.0)
+
+    def test_empty_group_request_rejected_at_synthesis(self):
+        eng = SynthesisEngine(torus2d(4, 4), registry=AlgorithmRegistry())
+        with pytest.raises(ValueError, match="empty group"):
+            eng.collective(CollectiveRequest("all_gather"))
+
+
+class TestPlannerRequestPath:
+    @pytest.fixture(scope="class")
+    def planner(self):
+        from repro.launch.sharding import MeshCollectivePlanner
+
+        topo = multi_pod(2, 2, 4, unit_links=True, dci_ports_per_pod=4)
+        return MeshCollectivePlanner(topo, {"data": 4, "model": 4},
+                                     registry=AlgorithmRegistry())
+
+    def test_request_and_legacy_agree(self, planner):
+        via_name = planner.algorithm("all_gather", "model", 0)
+        via_req = planner.algorithm(
+            CollectiveRequest("all_gather"), "model", 0)
+        assert _same_schedule(via_name, via_req)
+
+    def test_request_with_tuning_kwargs_rejected(self, planner):
+        with pytest.raises(TypeError, match="CollectiveRequest"):
+            planner.algorithm(CollectiveRequest("all_gather"), "model", 0,
+                              hierarchy="never")
+
+
+class TestErrorSurface:
+    def test_hierarchy_of_domain_errors(self):
+        assert issubclass(HierarchyError, PCCLError)
+        assert issubclass(SketchInfeasibleError, PCCLError)
+        assert issubclass(FabricDegradedError, PCCLError)
+        # the load-bearing distinction: a sketch violation must never ride
+        # the HierarchyError flat-fallback path
+        assert not issubclass(SketchInfeasibleError, HierarchyError)
+        assert not issubclass(FabricDegradedError, HierarchyError)
+        # catchable with stdlib idioms at serving boundaries
+        assert issubclass(FabricDegradedError, RuntimeError)
+        assert issubclass(HierarchyError, ValueError)
+
+    def test_auto_route_may_swallow_hierarchy_error(self):
+        # ring has no partition: the hierarchical route refuses, auto
+        # falls back flat — the advisory end of the contract
+        eng = SynthesisEngine(ring(4), registry=AlgorithmRegistry())
+        alg = eng.collective(CollectiveRequest(
+            "all_gather", group=tuple(range(4))))
+        alg.validate()
+        assert alg.name == "pccl_all_gather"
+
+    def test_pinned_route_raises_catchable_as_pccl_error(self):
+        eng = SynthesisEngine(ring(4), registry=AlgorithmRegistry())
+        with pytest.raises(PCCLError):
+            eng.collective(CollectiveRequest(
+                "all_gather", group=tuple(range(4)), hierarchy="always"))
