@@ -57,6 +57,7 @@ def main() -> None:
 
     from benchmarks import (
         alltoall_bw,
+        exec_mesh,
         hetero_switch,
         hierarchical,
         pg_sensitivity,
@@ -78,6 +79,7 @@ def main() -> None:
         ("fig16", process_group),
         ("fig18", utilization),
         ("fig19", pg_sensitivity),
+        ("fig_exec", exec_mesh),
         ("fig_hier", hierarchical),
         ("fig_plan", plan_store),
         ("fig_repair", repair),

@@ -5,11 +5,19 @@
 Builds a 4x4 mesh, synthesizes an All-Gather for a 3-NPU process group and
 an All-to-All for the whole mesh through the :class:`CollectiveRequest`
 API, validates both, compares against the Direct baseline, prints the
-ppermute translation, and finishes with a fault drill: a link dies and the
+ppermute translation, *executes* the process-group All-Gather on a real
+16-device jax mesh, and finishes with a fault drill: a link dies and the
 plan is repaired incrementally instead of re-synthesized from scratch.
 """
 
-from repro.core import (
+import os
+
+# the execution demo wants one (host CPU) jax device per NPU of the 4x4
+# mesh; must be set before jax initializes its backend
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+from repro.core import (  # noqa: E402
     AlgorithmRegistry,
     CollectiveRequest,
     DegradationEvent,
@@ -19,7 +27,7 @@ from repro.core import (
     to_msccl_json,
     to_ppermute_program,
 )
-from repro.topology import mesh2d, multi_pod
+from repro.topology import mesh2d, multi_pod  # noqa: E402
 
 
 def main():
@@ -58,6 +66,34 @@ def main():
     print("first round:", [(s.src, s.dst) for s in prog.rounds[0]][:8], "...")
     ir = to_msccl_json(alg)
     print(f"\nMSCCL-IR export: {len(ir)} bytes of JSON (alg 'pccl_all_gather')")
+
+    # --- execute the process-group All-Gather on a real jax mesh ---
+    # the same request lowers to shard_map ppermute rounds; out-of-group
+    # NPUs forward chunks in transit but return zeros
+    import numpy as np
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.comms import pccl_all_gather
+    from repro.jaxcompat import make_mesh, shard_map
+
+    n = len(topo.npus)
+    if jax.device_count() >= n:
+        jmesh = make_mesh((n,), ("x",))
+        x = (np.arange(n, dtype=np.float32) + 1.0)[:, None]  # NPU d holds d+1
+
+        def run_ag(xl):
+            return pccl_all_gather(xl[0], "x", topo, req)[None]
+
+        step = jax.jit(shard_map(run_ag, mesh=jmesh,
+                                 in_specs=P("x"), out_specs=P("x")))
+        out = np.asarray(step(x))  # [n, group_size, 1]
+        m = req.group[0]
+        print(f"\nexecuted on {n} jax devices: NPU {m} gathered "
+              f"{out[m, :, 0].tolist()} (group {list(req.group)}), "
+              f"non-member NPU 1 got {out[1, :, 0].tolist()}")
+    else:
+        print(f"\n(skipping mesh execution: {jax.device_count()} jax "
+              f"devices < {n})")
 
     # --- degraded-fabric repair ---
     # plan a pod-spanning All-Gather with phase capture, kill one

@@ -38,7 +38,8 @@ _BENCH_OUT = _BASELINE  # benchmarks.run writes to the repo-root path
 
 # deterministic per-row meta fields and their better-direction
 LOWER_BETTER = {"makespan", "transfers", "hier_makespan", "ratio",
-                "pccl_t", "misses", "plan_bytes", "disk_bytes"}
+                "pccl_t", "misses", "plan_bytes", "disk_bytes",
+                "rounds", "sends"}
 HIGHER_BETTER = {"speedup", "pccl_rel_bw", "valid"}
 # fields identifying the row's configuration; a mismatch means the two rows
 # measured different problems (quick vs full sizes) and must not be compared.
@@ -58,7 +59,7 @@ WALL_CLOCK_TOLERANCE = 3.0
 REQUIRED_ROW_PREFIXES = ("fig_hier_ag_", "fig_hier_rs_",
                          "fig_hier3_ag_", "fig_hier3_ar_",
                          "fig_hier_pipe_ar_", "fig_te_",
-                         "fig_plan_", "fig_repair_")
+                         "fig_plan_", "fig_repair_", "fig_exec_")
 
 
 def parse_meta(meta: str) -> dict[str, object]:

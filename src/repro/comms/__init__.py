@@ -8,6 +8,7 @@ from repro.comms.executor import (
 )
 from repro.comms.primitives import (
     CollectiveSpec,
+    lower_algorithm,
     pccl_all_gather,
     pccl_all_reduce,
     pccl_all_to_all,
@@ -30,6 +31,7 @@ __all__ = [
     "plan_buffers_cached",
     "plan_cache_stats",
     "CollectiveSpec",
+    "lower_algorithm",
     "pccl_all_gather",
     "pccl_all_reduce",
     "pccl_all_to_all",

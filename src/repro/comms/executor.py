@@ -15,6 +15,7 @@ inside the traced program use per-device constant tables indexed by
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -51,9 +52,11 @@ class BufferPlan:
         return self.num_slots + 1  # + trash
 
     def round_tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
-        """(send_slot, recv_slot, is_reduce) stacked over rounds, built once
-        per plan so re-executing a cached plan embeds one constant per table
-        instead of re-materializing per-round arrays on every trace."""
+        """(send_slot, recv_slot, is_reduce) stacked over rounds. The numpy
+        stacks are built once per plan; the jnp conversion happens per call
+        — memoizing the device arrays would capture the enclosing trace's
+        tracers when first materialized inside shard_map, and a cached plan
+        is shared across traces (tests, retraces, threads)."""
         if self._tables is None:
             n = self.num_devices
             if self.rounds:
@@ -64,9 +67,9 @@ class BufferPlan:
                 send = np.zeros((0, n), np.int32)
                 recv = np.zeros((0, n), np.int32)
                 red = np.zeros((0, n), bool)
-            self._tables = (jnp.asarray(send), jnp.asarray(recv),
-                            jnp.asarray(red))
-        return self._tables
+            self._tables = (send, recv, red)
+        send, recv, red = self._tables
+        return jnp.asarray(send), jnp.asarray(recv), jnp.asarray(red)
 
 
 def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
@@ -158,28 +161,47 @@ def plan_buffers(prog: PpermuteProgram) -> BufferPlan:
 
 _PLAN_CACHE: OrderedDict[object, BufferPlan] = OrderedDict()
 _PLAN_CACHE_MAX = 128
+_PLAN_LOCK = threading.Lock()
 plan_cache_stats = {"hits": 0, "misses": 0}
 
 
 def plan_buffers_cached(prog: PpermuteProgram, fingerprint: object) -> BufferPlan:
-    """``plan_buffers`` behind an LRU keyed by the caller's fingerprint (the
-    registry fingerprint plus device mapping is the natural key)."""
-    plan = _PLAN_CACHE.get(fingerprint)
-    if plan is not None:
-        _PLAN_CACHE.move_to_end(fingerprint)
-        plan_cache_stats["hits"] += 1
-        return plan
+    """``plan_buffers`` behind a thread-safe LRU.
+
+    The key pairs the caller's fingerprint (registry fingerprint plus device
+    mapping is the natural choice) with the program's own structural digest,
+    so two distinct programs whose callers happen to hand in the same
+    fingerprint can never cross-serve one buffer plan — the digest disambiguates
+    while the caller fingerprint keeps lookups stable across re-translations
+    of the same schedule.
+    """
+    key = (fingerprint, prog.digest())
+    with _PLAN_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+            plan_cache_stats["hits"] += 1
+            return plan
+    # plan outside the lock: duplicated work under a race is cheaper than
+    # serializing every cold plan behind one mutex
     plan = plan_buffers(prog)
-    plan_cache_stats["misses"] += 1
-    _PLAN_CACHE[fingerprint] = plan
-    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
-        _PLAN_CACHE.popitem(last=False)
+    with _PLAN_LOCK:
+        existing = _PLAN_CACHE.get(key)
+        if existing is not None:
+            _PLAN_CACHE.move_to_end(key)
+            plan_cache_stats["hits"] += 1
+            return existing
+        plan_cache_stats["misses"] += 1
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
     return plan
 
 
 def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    plan_cache_stats.update(hits=0, misses=0)
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
+        plan_cache_stats.update(hits=0, misses=0)
 
 
 def execute_program(

@@ -39,10 +39,39 @@ class CollectiveSpec:
     """What to synthesize: collective kind over a device group embedded in a
     physical topology. `device_of_npu` maps topology NPU ids to mesh axis
     indices; it must cover every NPU that may forward traffic (the whole
-    topology for process-group-aware routing)."""
+    topology for process-group-aware routing).
+
+    Everywhere a ``CollectiveSpec`` is accepted, a fully-specified
+    :class:`~repro.core.request.CollectiveRequest` works too — that is the
+    way to execute hierarchy/TE/pipelining-routed plans, since the request
+    carries ``hierarchy``/``gateway_strategy``/``sketch``/``pipelined``."""
 
     kind: str  # all_gather | reduce_scatter | all_reduce | all_to_all
     group: tuple[int, ...]  # NPU ids of the process group, in axis order
+
+
+_EXEC_KINDS = ("all_gather", "all_to_all", "reduce_scatter", "all_reduce")
+
+
+def _as_request(spec, nbytes: float, pipelined_ar: bool) -> CollectiveRequest:
+    """Normalize CollectiveSpec | CollectiveRequest into a CollectiveRequest."""
+    if isinstance(spec, CollectiveRequest):
+        req = spec
+    elif isinstance(spec, CollectiveSpec):
+        req = CollectiveRequest(
+            spec.kind, group=tuple(spec.group), bytes=nbytes,
+            pipelined=pipelined_ar if spec.kind == "all_reduce" else False)
+    else:
+        raise TypeError(
+            f"spec must be CollectiveSpec or CollectiveRequest, "
+            f"got {type(spec).__name__}")
+    if req.kind not in _EXEC_KINDS:
+        raise ValueError(
+            f"collective kind {req.kind!r} is not executable "
+            f"(expected one of {_EXEC_KINDS})")
+    if not req.group:
+        raise ValueError("executable collectives need an explicit group")
+    return req
 
 
 # translated programs, keyed by fingerprint (bounded LRU; BufferPlans are
@@ -72,7 +101,7 @@ def _engine_for(topo: Topology, registry) -> SynthesisEngine:
 
 def synthesize_program(
     topo: Topology,
-    spec: CollectiveSpec,
+    spec,
     *,
     nbytes: float = 1.0,
     device_of_npu: dict[int, int] | None = None,
@@ -83,22 +112,23 @@ def synthesize_program(
     the algorithm through the (shared) AlgorithmRegistry — so isomorphic
     process groups reuse one synthesized plan — the translated program here,
     and the BufferPlan through the executor's plan cache (the single owner
-    of plans; every call goes through it, so its stats reflect real reuse)."""
+    of plans; every call goes through it, so its stats reflect real reuse).
+
+    ``spec`` is a :class:`CollectiveSpec` (legacy default route) or a
+    :class:`~repro.core.request.CollectiveRequest` — the latter executes any
+    engine route: ``hierarchy="always"``, TE gateway strategies, comm
+    sketches, pipelined all-reduce. ``nbytes``/``pipelined_ar`` only apply
+    to the CollectiveSpec form; a request carries its own."""
     registry = registry if registry is not None else default_registry()
+    req = _as_request(spec, nbytes, pipelined_ar)
     dev_key = (None if device_of_npu is None
                else tuple(sorted(device_of_npu.items())))
-    key = (topology_fingerprint(topo), spec, nbytes, pipelined_ar, dev_key)
+    key = (topology_fingerprint(topo), req.fingerprint(), dev_key)
     prog = _PROGRAM_CACHE.get(key)
     if prog is not None:
         _PROGRAM_CACHE.move_to_end(key)
     else:
         engine = _engine_for(topo, registry)
-        if spec.kind not in ("all_gather", "all_to_all", "reduce_scatter",
-                             "all_reduce"):
-            raise ValueError(f"unknown collective kind {spec.kind!r}")
-        req = CollectiveRequest(
-            spec.kind, group=tuple(spec.group), bytes=nbytes,
-            pipelined=pipelined_ar if spec.kind == "all_reduce" else False)
         alg = engine.collective(req)
         alg.validate()
         prog = to_ppermute_program(alg, device_of_npu)
@@ -108,11 +138,53 @@ def synthesize_program(
     return prog, plan_buffers_cached(prog, key)
 
 
-def _group_devices(prog: PpermuteProgram, spec: CollectiveSpec,
+def lower_algorithm(
+    alg,
+    *,
+    key: object = "lowered",
+    device_of_npu: dict[int, int] | None = None,
+    validate: bool = False,
+) -> tuple[PpermuteProgram, BufferPlan]:
+    """Lower a pre-synthesized :class:`CollectiveAlgorithm` — e.g. a
+    ``PlanRepairer`` repair result or a hand-stitched ``PhasePlan`` — to an
+    executable (program, plan) pair that the ``pccl_*`` primitives accept
+    via their ``program=`` argument. ``key`` namespaces the buffer-plan
+    cache entry; the program's structural digest keeps distinct schedules
+    apart even under one key."""
+    if validate:
+        alg.validate()
+    prog = to_ppermute_program(alg, device_of_npu)
+    return prog, plan_buffers_cached(prog, key)
+
+
+def _group_devices(prog: PpermuteProgram, spec,
                    device_of_npu: dict[int, int] | None) -> list[int]:
     if device_of_npu is None:
         return list(spec.group)
     return [device_of_npu[n] for n in spec.group]
+
+
+def _member_mask(prog: PpermuteProgram, devices: list[int]) -> np.ndarray:
+    mask = np.zeros(prog.num_devices, dtype=bool)
+    mask[devices] = True
+    return mask
+
+
+def _resolve(topo, spec, device_of_npu, program, kind):
+    """Shared head of the pccl_* primitives: check the kind, fetch or accept
+    a (program, plan) pair, map the group onto mesh devices, and build the
+    non-participant mask — devices outside the process group may forward
+    traffic (that is PG-awareness executing) but must hand back exact
+    zeros, never forwarded or partially-reduced payloads."""
+    req_kind = spec.kind
+    if req_kind != kind:
+        raise ValueError(f"pccl_{kind} got a spec of kind {req_kind!r}")
+    if program is not None:
+        prog, plan = program
+    else:
+        prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
+    devices = _group_devices(prog, spec, device_of_npu)
+    return prog, plan, devices, _member_mask(prog, devices)
 
 
 def _chunks_by_src(prog: PpermuteProgram, devices: list[int]) -> dict[int, list[int]]:
@@ -130,16 +202,18 @@ def _chunks_by_src(prog: PpermuteProgram, devices: list[int]) -> dict[int, list[
 def pccl_all_gather(
     x: jax.Array,
     axis_name,
-    topo: Topology,
-    spec: CollectiveSpec,
+    topo: Topology | None,
+    spec,
     *,
     device_of_npu: dict[int, int] | None = None,
+    program: tuple[PpermuteProgram, BufferPlan] | None = None,
     tiled: bool = False,
 ) -> jax.Array:
     """All-gather x (local shard, shape S) over the group -> [g, *S] stacked
-    in group order (or concatenated on axis 0 when tiled=True)."""
-    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
-    devices = _group_devices(prog, spec, device_of_npu)
+    in group order (or concatenated on axis 0 when tiled=True). Devices
+    outside the group return zeros."""
+    prog, plan, devices, member = _resolve(
+        topo, spec, device_of_npu, program, "all_gather")
     by_src = _chunks_by_src(prog, devices)
     # one chunk per group member
     my_chunk_slot = np.zeros(prog.num_devices, dtype=np.int32)
@@ -154,21 +228,25 @@ def pccl_all_gather(
     buf = execute_program(plan, buf, axis_name)
     ordered_chunks = [by_src[d][0] for d in devices]
     out = gather_slots(plan, buf, axis_name, ordered_chunks)
+    # non-participants may have forwarded chunks sitting in their slots —
+    # mask so their output is untouched-by-the-collective zeros
+    out = jnp.where(jnp.asarray(member)[idx], out, jnp.zeros_like(out))
     return jnp.concatenate(list(out), axis=0) if tiled else out
 
 
 def pccl_reduce_scatter(
     x: jax.Array,
     axis_name,
-    topo: Topology,
-    spec: CollectiveSpec,
+    topo: Topology | None,
+    spec,
     *,
     device_of_npu: dict[int, int] | None = None,
+    program: tuple[PpermuteProgram, BufferPlan] | None = None,
 ) -> jax.Array:
     """x: [g, *S] (addend g for each group member); returns this device's
     reduced shard [*S] (devices outside the group return zeros)."""
-    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
-    devices = _group_devices(prog, spec, device_of_npu)
+    prog, plan, devices, member = _resolve(
+        topo, spec, device_of_npu, program, "reduce_scatter")
     # chunk k is owned by group member k (condition order = group order)
     chunks = sorted(prog.chunk_holders)  # ReduceCondition: dests are owners
     owner_of_chunk = {c: prog.chunk_dests[c][0] for c in chunks}
@@ -196,23 +274,26 @@ def pccl_reduce_scatter(
     out_slot = np.full(prog.num_devices, plan.num_slots, np.int32)
     for dev in devices:
         out_slot[dev] = plan.slot_of[(dev, int(my_chunk_table[dev]))]
-    return lax.dynamic_index_in_dim(
+    out = lax.dynamic_index_in_dim(
         buf, jnp.asarray(out_slot)[idx], axis=0, keepdims=False
     )
+    return jnp.where(jnp.asarray(member)[idx], out, jnp.zeros_like(out))
 
 
 def pccl_all_reduce(
     x: jax.Array,
     axis_name,
-    topo: Topology,
-    spec: CollectiveSpec,
+    topo: Topology | None,
+    spec,
     *,
     device_of_npu: dict[int, int] | None = None,
+    program: tuple[PpermuteProgram, BufferPlan] | None = None,
 ) -> jax.Array:
     """All-reduce x (same shape everywhere) over the group. x is split into
-    g shard-chunks along axis 0 (must divide); composition RS∘AG per §4.5."""
-    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
-    devices = _group_devices(prog, spec, device_of_npu)
+    g shard-chunks along axis 0 (must divide); composition RS∘AG per §4.5.
+    Devices outside the group return zeros."""
+    prog, plan, devices, member = _resolve(
+        topo, spec, device_of_npu, program, "all_reduce")
     g = len(devices)
     chunks = sorted(prog.chunk_holders)
     assert len(chunks) == g, "all_reduce uses one shard-chunk per member"
@@ -233,22 +314,25 @@ def pccl_all_reduce(
         )
     buf = execute_program(plan, buf, axis_name)
     out = gather_slots(plan, buf, axis_name, chunks)
+    out = jnp.where(jnp.asarray(member)[idx], out, jnp.zeros_like(out))
     return jnp.reshape(out, x.shape)
 
 
 def pccl_all_to_all(
     x: jax.Array,
     axis_name,
-    topo: Topology,
-    spec: CollectiveSpec,
+    topo: Topology | None,
+    spec,
     *,
     device_of_npu: dict[int, int] | None = None,
+    program: tuple[PpermuteProgram, BufferPlan] | None = None,
 ) -> jax.Array:
     """x: [g, *S] where row j is this device's payload for group member j.
     Returns [g, *S] where row i is the payload received from member i
-    (row for self = own self-payload, which never leaves the device)."""
-    prog, plan = synthesize_program(topo, spec, device_of_npu=device_of_npu)
-    devices = _group_devices(prog, spec, device_of_npu)
+    (row for self = own self-payload, which never leaves the device).
+    Devices outside the group return zeros."""
+    prog, plan, devices, member = _resolve(
+        topo, spec, device_of_npu, program, "all_to_all")
     g = len(devices)
     rank_of_device = {d: r for r, d in enumerate(devices)}
     # chunk (i -> j): src devices[i], dest devices[j]; build per-device tables
@@ -280,4 +364,7 @@ def pccl_all_to_all(
     # self row: take from input (never transferred)
     me = jnp.asarray(self_row)[idx]
     self_payload = lax.dynamic_index_in_dim(x, me, axis=0, keepdims=False)
-    return lax.dynamic_update_index_in_dim(out, self_payload, me, axis=0)
+    out = lax.dynamic_update_index_in_dim(out, self_payload, me, axis=0)
+    # the self-row write above lands row 0 <- x[0] on non-participants
+    # (self_row defaults to 0); mask them back to zeros
+    return jnp.where(jnp.asarray(member)[idx], out, jnp.zeros_like(out))

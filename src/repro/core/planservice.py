@@ -99,6 +99,18 @@ class PlanService:
         return self.planner(topo, axis_sizes).algorithm(
             kind, axis, group_index, nbytes=nbytes, **kw)
 
+    def program(self, topo, axis_sizes: dict[str, int], kind, axis: str,
+                group_index: int = 0, *, nbytes: float = 1.0,
+                device_of_npu: dict[int, int] | None = None):
+        """One group's executable ``(PpermuteProgram, BufferPlan)`` through
+        the memoized planner — what ``repro.comms``' ``pccl_*`` primitives
+        take via ``program=`` to run the collective inside shard_map.
+        ``kind`` is a name or :class:`~repro.core.request.CollectiveRequest`,
+        exactly as in :meth:`plan`."""
+        return self.planner(topo, axis_sizes).program(
+            kind, axis, group_index, nbytes=nbytes,
+            device_of_npu=device_of_npu)
+
     # -- repair -------------------------------------------------------------
 
     def repairer(self, topo, *, pipeline: str | bool = "auto"):

@@ -13,13 +13,14 @@ An MSCCL-IR-style JSON export is retained for interoperability/debugging.
 
 from __future__ import annotations
 
+import hashlib
 import json
 from collections import defaultdict
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.algorithm import CollectiveAlgorithm, Transfer, TransferColumns
+from repro.core.algorithm import CollectiveAlgorithm, TransferColumns
 from repro.core.conditions import Condition, ReduceCondition
 
 
@@ -43,19 +44,114 @@ class PpermuteProgram:
     # initial holder; reduced chunks start at every contributing device.
     chunk_holders: dict[int, tuple[int, ...]] = field(default_factory=dict)
     chunk_dests: dict[int, tuple[int, ...]] = field(default_factory=dict)
+    _digest: str | None = field(default=None, repr=False, compare=False)
 
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
 
     @property
+    def num_sends(self) -> int:
+        return sum(len(r) for r in self.rounds)
+
+    @property
     def chunk_srcs(self) -> dict[int, int]:
         """Primary holder per chunk (the source for non-reduction chunks)."""
         return {c: h[0] for c, h in self.chunk_holders.items()}
 
+    def digest(self) -> str:
+        """Structural fingerprint of the *program itself* (rounds, sends,
+        chunk metadata), memoized. Buffer-plan caching keys on this in
+        addition to the caller's fingerprint, so two distinct programs can
+        never cross-serve one plan even if their callers' fingerprints
+        collide (see ``repro.comms.executor.plan_buffers_cached``)."""
+        if self._digest is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(str(self.num_devices).encode())
+            for rnd in self.rounds:
+                h.update(b"|")
+                for s in rnd:
+                    h.update(
+                        f"{s.src},{s.dst},{s.chunk},{int(s.reduce)};".encode())
+            h.update(repr(sorted(self.chunk_holders.items())).encode())
+            h.update(repr(sorted(self.chunk_dests.items())).encode())
+            self._digest = h.hexdigest()
+        return self._digest
+
+
+def _unroll_switch_hops(alg: CollectiveAlgorithm) -> list[tuple]:
+    """Collapse switch hops into direct NPU-to-NPU sends.
+
+    Switch nodes exist on the fabric (DCI/spine/aggregation) but not on the
+    execution mesh, so a chunk's path ``npu -> switch -> ... -> npu`` must
+    lower to sends between NPUs only. Walking transfers in time order, each
+    switch keeps a per-chunk set of *contributions* — the effective NPU
+    origins whose values have arrived so far:
+
+    * a **copy** out of a switch (multicast fan-out, store-and-forward
+      relay) re-emits from any arrived origin — every copy of a chunk
+      carries the same value (the validator's normal form permits copies of
+      reduce chunks only after assembly), so the origin choice is free and
+      we take the earliest arrival for determinism; contributions stay for
+      later fan-out hops;
+    * a **reduce** out of a switch merges every arrived contribution — the
+      lowered program sends each contributing origin's partial directly to
+      the hop's destination, which accumulates them (receive-reduce), so
+      the switch-side accumulation of the timed schedule is reproduced at
+      the destination NPU. Contributions are consumed: the normal form
+      allows at most one partial send per (chunk, node).
+
+    Each lowered send is stamped with the *final hop's* start time, so wave
+    order (and therefore store-and-forward causality) is inherited from the
+    timed schedule: the origin held its value no later than its own send
+    into the switch chain, which started strictly earlier.
+    """
+    topo = alg.topology
+    is_sw = topo.is_switch
+    # (switch, chunk) -> list of (arrival_time, origin_npu)
+    pending: dict[tuple[int, int], list[tuple[float, int]]] = defaultdict(list)
+    out: list[tuple] = []
+    order = sorted(alg.transfers,
+                   key=lambda t: (t.start, t.end, t.src, t.dst, t.chunk))
+    eps = 1e-9
+    for t in order:
+        if is_sw(t.src):
+            key = (t.src, t.chunk)
+            arrived = [e for e in pending[key] if e[0] <= t.start + eps]
+            if not arrived:
+                raise ValueError(
+                    f"switch {t.src} forwards chunk {t.chunk} at t={t.start} "
+                    f"before any arrival: schedule is not store-and-forward"
+                )
+            if t.reduce:
+                origins = [o for _, o in arrived]
+                pending[key] = [e for e in pending[key]
+                                if e[0] > t.start + eps]
+            else:
+                origins = [min(arrived)[1]]
+        else:
+            origins = [t.src]
+        if is_sw(t.dst):
+            pending[(t.dst, t.chunk)].extend((t.end, o) for o in origins)
+        else:
+            for o in origins:
+                if o == t.dst:
+                    if t.reduce:
+                        raise ValueError(
+                            f"chunk {t.chunk}: reduce contribution of NPU "
+                            f"{o} routed back into itself (would double-"
+                            f"count); schedule violates the in-forest form"
+                        )
+                    continue  # copy round-trip: value already resident
+                out.append((t.start, o, t.dst, t.chunk, t.reduce))
+    return out
+
 
 def to_ppermute_program(
-    alg: CollectiveAlgorithm, device_of_npu: dict[int, int] | None = None
+    alg: CollectiveAlgorithm,
+    device_of_npu: dict[int, int] | None = None,
+    *,
+    unroll_switches: bool = True,
 ) -> PpermuteProgram:
     """Bucket timed transfers into dependency-honoring ppermute rounds.
 
@@ -65,18 +161,40 @@ def to_ppermute_program(
     (ppermute semantics). Store-and-forward causality is kept because waves
     execute in start-time order and a chunk's forward always starts at or
     after its arrival wave.
+
+    Composed :class:`~repro.core.engine.PhasePlan` schedules (hierarchical
+    sequential, chunk-pipelined, TE-routed, time-reversed, repaired) lower
+    through the same path: their phases share one absolute clock, so
+    per-chunk release floors and phase barriers collapse to wave order here,
+    and their receive-reduce transfers carry the ``reduce`` flag per send.
+    Schedules riding switch nodes (multi_pod DCI, three_level aggregation,
+    two_level_switch spines) are unrolled into direct NPU-to-NPU sends
+    first (see :func:`_unroll_switch_hops`); pass ``unroll_switches=False``
+    to get the historical strict behavior instead.
     """
     if device_of_npu is None:
         device_of_npu = {n: n for n in alg.topology.npus}
-    for t in alg.transfers:
-        if alg.topology.is_switch(t.src) or alg.topology.is_switch(t.dst):
+    topo = alg.topology
+    has_switch = any(
+        topo.is_switch(int(n))
+        for n in np.unique(np.concatenate(
+            [alg.columns.src, alg.columns.dst]))
+    ) if len(alg.columns) else False
+    if has_switch:
+        if not unroll_switches:
             raise ValueError(
                 "ppermute translation requires NPU-to-NPU schedules; "
                 "unroll switches or use the JSON export"
             )
-    waves: dict[float, list[Transfer]] = defaultdict(list)
-    for t in alg.transfers:
-        waves[round(t.start, 9)].append(t)
+        sends = _unroll_switch_hops(alg)
+    else:
+        cols = alg.columns
+        sends = list(zip(cols.start.tolist(), cols.src.tolist(),
+                         cols.dst.tolist(), cols.chunk.tolist(),
+                         cols.reduce.tolist()))
+    waves: dict[float, list[tuple]] = defaultdict(list)
+    for s in sends:
+        waves[round(s[0], 9)].append(s)
 
     prog = PpermuteProgram(num_devices=len(device_of_npu))
     for c in alg.conditions:
@@ -88,20 +206,20 @@ def to_ppermute_program(
             sorted(device_of_npu[d] for d in c.dests)
         )
     for start in sorted(waves):
-        pending = sorted(waves[start], key=lambda t: (t.src, t.dst, t.chunk))
+        pending = sorted(waves[start], key=lambda s: (s[1], s[2], s[3]))
         while pending:
             used_src: set[int] = set()
             used_dst: set[int] = set()
             round_sends: list[Send] = []
-            rest: list[Transfer] = []
+            rest: list[tuple] = []
             for t in pending:
-                s, d = device_of_npu[t.src], device_of_npu[t.dst]
+                s, d = device_of_npu[t[1]], device_of_npu[t[2]]
                 if s in used_src or d in used_dst:
                     rest.append(t)
                     continue
                 used_src.add(s)
                 used_dst.add(d)
-                round_sends.append(Send(s, d, t.chunk, t.reduce))
+                round_sends.append(Send(s, d, t[3], bool(t[4])))
             prog.rounds.append(round_sends)
             pending = rest
     return prog

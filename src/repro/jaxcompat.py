@@ -16,6 +16,22 @@ else:  # pre-0.6 jax
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_unchecked(f, **kw):
+    """``shard_map`` with the replication check disabled — required around
+    ppermute-built collectives, whose replicated outputs the checker cannot
+    infer. The kwarg was renamed ``check_rep`` -> ``check_vma`` across jax
+    releases; try current first."""
+    import inspect
+
+    try:
+        names = set(inspect.signature(shard_map).parameters)
+    except (TypeError, ValueError):
+        names = set()
+    if "check_vma" in names:
+        return shard_map(f, check_vma=False, **kw)
+    return shard_map(f, check_rep=False, **kw)
+
+
 def axis_types_kwargs(num_axes: int) -> dict:
     """``{"axis_types": (Auto,) * n}`` where supported, else ``{}``."""
     at = getattr(jax.sharding, "AxisType", None)

@@ -381,15 +381,26 @@ class MeshCollectivePlanner:
                     self.algorithm(kind, axis, i, nbytes=nbytes)
         return self.registry.stats.as_dict()
 
-    def program(self, kind: str, axis: str, group_index: int = 0, *,
-                nbytes: float = 1.0):
+    def program(self, kind, axis: str, group_index: int = 0, *,
+                nbytes: float = 1.0,
+                device_of_npu: dict[int, int] | None = None):
         """(PpermuteProgram, BufferPlan) for executing one group's collective
         inside shard_map — synthesis, translation, and buffer planning all
-        cached by fingerprint (see repro.comms)."""
+        cached by fingerprint (see repro.comms).
+
+        ``kind`` is a collective name or a
+        :class:`repro.core.request.CollectiveRequest` (group filled in from
+        the axis), mirroring :meth:`algorithm` — requests execute any engine
+        route (hierarchy, TE gateways, sketches, pipelining)."""
         from repro.comms.primitives import CollectiveSpec, synthesize_program
+        from repro.core.request import CollectiveRequest
 
         group = tuple(self.axis_groups(axis)[group_index])
+        if isinstance(kind, CollectiveRequest):
+            spec = kind.with_group(group)
+        else:
+            spec = CollectiveSpec(kind, group)
         return synthesize_program(
-            self.topo, CollectiveSpec(kind, group), nbytes=nbytes,
-            registry=self.registry,
+            self.topo, spec, nbytes=nbytes, registry=self.registry,
+            device_of_npu=device_of_npu,
         )

@@ -1,0 +1,31 @@
+"""Shared pytest wiring: the ``mesh`` marker.
+
+``mesh``-marked tests execute collectives on a multi-device jax mesh and
+need at least 8 devices — in CI that is the host-CPU mesh forced via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+initializes). When fewer devices are available the tests are skipped, so
+plain tier-1 runs stay green on a single-device install while
+``pytest -m mesh`` exercises the executor end to end.
+"""
+
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if not any(item.get_closest_marker("mesh") for item in items):
+        return
+    try:
+        import jax
+
+        n = jax.device_count()
+    except Exception:  # noqa: BLE001 - any import/backend failure means no mesh
+        n = 0
+    if n >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason=f"mesh tests need >= 8 jax devices (have {n}); run with "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=8"
+    )
+    for item in items:
+        if item.get_closest_marker("mesh"):
+            item.add_marker(skip)

@@ -1,0 +1,80 @@
+"""Property test: random (fabric, process group, kind) triples synthesize,
+execute on the 8-device host mesh, and match the pure-numpy reference.
+
+Hypothesis shrinks a failure to a minimal (topology, group, kind) triple —
+smallest group over the simplest fabric — which is exactly the reproduction
+one wants when a schedule mis-executes. Inputs are seeded from the triple,
+so every example (and every shrink step) is deterministic. When hypothesis
+is absent, a deterministic seeded sweep over the same space still runs.
+"""
+
+import numpy as np
+import pytest
+
+from _exec_harness import KINDS, check_collective
+
+pytestmark = pytest.mark.mesh
+
+N = 8
+
+FABRICS = ["ring8", "line8", "torus24", "grid23", "mp222"]
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _build(name: str):
+    from repro.topology import line, ring, torus2d
+    from repro.topology.generators import grid_hypercube, multi_pod
+
+    return {
+        "ring8": lambda: ring(8, bidirectional=True),
+        "line8": lambda: line(8),
+        "torus24": lambda: torus2d(2, 4),
+        "grid23": lambda: grid_hypercube(2, 3),
+        "mp222": lambda: multi_pod(2, 2, 2, unit_links=True,
+                                   dci_ports_per_pod=2),
+    }[name]()
+
+
+_topos: dict[str, object] = {}
+
+
+def _check_triple(fabric: str, kind: str, group: tuple[int, ...]) -> None:
+    from repro.core import CollectiveRequest
+
+    topo = _topos.setdefault(fabric, _build(fabric))
+    req = CollectiveRequest(kind, group=group)
+    seed = int(np.uint32(hash((fabric, kind, group)) & 0xFFFFFFFF))
+    check_collective(kind, topo, req, group, n=N, seed=seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(
+        fabric=st.sampled_from(FABRICS),
+        kind=st.sampled_from(KINDS),
+        group=st.lists(st.integers(0, N - 1), min_size=2, max_size=N,
+                       unique=True).map(lambda g: tuple(sorted(g))),
+    )
+    def test_random_triple_executes_conformantly(fabric, kind, group):
+        _check_triple(fabric, kind, group)
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_seeded_triple_sweep(case):
+    """Deterministic fallback sweep over the same (fabric, group, kind)
+    space — runs with or without hypothesis installed."""
+    rng = np.random.default_rng(1000 + case)
+    fabric = FABRICS[int(rng.integers(len(FABRICS)))]
+    kind = KINDS[int(rng.integers(len(KINDS)))]
+    size = int(rng.integers(2, N + 1))
+    group = tuple(sorted(rng.choice(N, size=size, replace=False).tolist()))
+    _check_triple(fabric, kind, group)

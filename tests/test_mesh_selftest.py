@@ -1,0 +1,44 @@
+"""The multi-device executor selftest, promoted into tier-visible pytest.
+
+``repro.comms.selftest`` historically ran only as ``python -m`` in a
+subprocess; here each of its checks is a parametrized ``mesh``-marked test,
+so its assertions count whenever >= 8 devices are available (the CI mesh
+job) and skip cleanly otherwise. The selftest module is imported lazily
+inside the test body: importing it sets a default ``XLA_FLAGS``, which must
+not happen during collection of a single-device run.
+"""
+
+import pytest
+
+pytestmark = pytest.mark.mesh
+
+CASES = [
+    "test_all_gather_ring",
+    "test_all_gather_subgroup_with_forwarding",
+    "test_all_reduce",
+    "test_reduce_scatter",
+    "test_all_to_all_torus_rows",
+    "test_all_to_all_subgroup",
+    "test_two_axis_flattened",
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_selftest(case):
+    from repro.comms import selftest
+
+    getattr(selftest, case)()
+
+
+def test_selftest_main_lists_every_case():
+    """Keep this parametrization in sync with the selftest's own main()."""
+    from repro.comms import selftest
+
+    import inspect
+
+    src = inspect.getsource(selftest.main)
+    missing = [c for c in CASES if c not in src]
+    assert not missing, f"selftest.main() missing {missing}"
+    defined = [n for n in dir(selftest) if n.startswith("test_")]
+    uncovered = sorted(set(defined) - set(CASES))
+    assert not uncovered, f"selftest checks not promoted to pytest: {uncovered}"
